@@ -1,0 +1,42 @@
+"""Tables 8–12 analogue: kernel block-shape sweep (VMEM residency).
+
+The paper compares shared vs global memory placement of the core factors.
+The TPU analogue is the BlockSpec batch-tile (``block_b``) of the
+``kruskal_contract`` kernel: larger tiles amortize the VMEM staging of the
+resident B^(n) factors until the tile footprint approaches the ~16 MB VMEM
+budget. We report the analytic VMEM footprint per grid step (the structural
+quantity that decides residency on real hardware) plus interpret-mode
+timing for relative ordering.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kruskal_contract import kruskal_contract
+
+from .common import row, time_call
+
+N, B, J, R = 3, 16384, 16, 16
+VMEM_BUDGET = 16 * 2**20
+
+
+def vmem_bytes(block_b: int) -> int:
+    # a_tile (N,bt,J) + b (N,J,R) + pexc (N,bt,R) + pred (bt,), f32
+    return 4 * (N * block_b * J + N * J * R + N * block_b * R + block_b)
+
+
+def run() -> list[str]:
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (N, B, J))
+    b = jax.random.normal(key, (N, J, R))
+    out = []
+    for bb in (128, 256, 512, 1024, 2048, 4096):
+        us = time_call(
+            lambda: kruskal_contract(a, b, block_b=bb, interpret=True),
+            warmup=1, iters=3,
+        )
+        vm = vmem_bytes(bb)
+        fits = "fits" if vm < VMEM_BUDGET else "OVER"
+        out.append(row(f"tbl8-12/kruskal_block{bb}", us,
+                       f"vmem_kb={vm//1024};{fits}"))
+    return out

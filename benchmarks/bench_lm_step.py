@@ -1,0 +1,50 @@
+"""Framework-side: per-arch train-step wall time on reduced configs (CPU).
+
+Not a paper table — establishes that every assigned architecture actually
+*runs* a full loss→grad→AdamW step, and gives a relative cost ordering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import steps as S
+from repro.models import init_model, unbox
+from repro.optim import adamw
+
+from .common import row, time_call
+
+
+def run() -> list[str]:
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, reduced=True)
+        params = unbox(init_model(jax.random.PRNGKey(0), cfg))
+        opt = adamw.init(params)
+        state = S.TrainState(params, opt)
+        step = jax.jit(S.make_train_step(cfg, adamw.AdamWConfig()))
+        B, Ss = 4, 64
+        key = jax.random.PRNGKey(1)
+        batch = {}
+        if cfg.frontend == "audio":
+            batch["frames"] = jax.random.normal(key, (B, Ss,
+                                                      cfg.frontend_dim))
+            batch["labels"] = jax.random.randint(key, (B, Ss), 0,
+                                                 cfg.vocab_size)
+        elif cfg.frontend == "vision":
+            P = cfg.num_patches
+            batch["patches"] = jax.random.normal(key, (B, P,
+                                                       cfg.frontend_dim))
+            batch["tokens"] = jax.random.randint(key, (B, Ss - P), 0,
+                                                 cfg.vocab_size)
+            batch["labels"] = jax.random.randint(key, (B, Ss - P), 0,
+                                                 cfg.vocab_size)
+        else:
+            batch["tokens"] = jax.random.randint(key, (B, Ss), 0,
+                                                 cfg.vocab_size)
+            batch["labels"] = jax.random.randint(key, (B, Ss), 0,
+                                                 cfg.vocab_size)
+        us = time_call(lambda: step(state, batch), warmup=1, iters=3)
+        out.append(row(f"lm_step/{arch}", us, "reduced_cfg_B4_S64"))
+    return out

@@ -1,0 +1,92 @@
+"""Fig. 7b/c + Fig. 8 analogue: multi-device STD scaling.
+
+Fake host devices share the same CPU cores, so wall-clock 'speedup' is not
+observable here; what IS measurable and scale-relevant:
+  * per-device collective bytes per step (sync vs strata) — strata moves
+    factor shards (2·N·ppermute) independent of batch; sync psums dense
+    gradients;
+  * per-device FLOPs per step — ∝ 1/M (the work really divides).
+Both come from the compiled HLO of the actual distributed step, per device
+count M ∈ {2, 4, 8} — the quantities behind the paper's near-linear curves.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from .common import row
+
+REPO = Path(__file__).resolve().parent.parent
+
+_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={M}"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import FastTuckerConfig, init_state
+from repro.data.synthetic import planted_tensor
+from repro.distributed import strategy
+from repro.launch.mesh import make_host_mesh
+from repro.launch.hlo_analysis import analyze
+
+dims = (1024, 768, 512)
+t = planted_tensor(dims, 100_000, seed=0)
+# strong scaling: fixed GLOBAL |Ψ|=8192 split across devices
+cfg = FastTuckerConfig(dims=dims, ranks=(8,)*3, core_rank=8,
+                       batch_size=8192 // {M})
+mesh = make_host_mesh()
+M = mesh.devices.size
+state = init_state(jax.random.PRNGKey(0), cfg)
+out = {{}}
+
+idx_sh, val_sh = strategy.shard_nonzeros(t, M)
+step = strategy.make_sync_step(cfg, mesh)
+ef = strategy.init_error_feedback(state.params)
+with mesh:
+    lowered = step.lower(state.params, jnp.asarray(0),
+                         jax.random.PRNGKey(1), idx_sh, val_sh, ef)
+    comp = lowered.compile()
+a = analyze(comp.as_text())
+out["sync"] = {{"flops": a["flops"],
+               "coll": a["collective_wire_total"]}}
+print(json.dumps(out))
+"""
+
+
+def _run_for(M: int) -> dict:
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={M}"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SNIPPET.format(M=M)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run() -> list[str]:
+    out = []
+    base_flops = None
+    for M in (2, 4, 8):
+        try:
+            r = _run_for(M)
+        except Exception as e:  # noqa: BLE001
+            out.append(row(f"fig7bc/M{M}", 0.0, f"error={e}"))
+            continue
+        fl = r["sync"]["flops"]
+        cl = r["sync"]["coll"]
+        if base_flops is None:
+            base_flops = fl * M
+        eff = base_flops / (fl * M)
+        out.append(row(
+            f"fig7bc/sync_M{M}", 0.0,
+            f"flops/dev={fl:.3g};coll/dev={cl:.3g}B;"
+            f"work_scaling_eff={eff:.2f}"))
+    return out

@@ -1,0 +1,84 @@
+"""Baseline vs optimized roofline comparison (paper-faithful vs beyond-paper).
+
+Reads artifacts/dryrun (baseline) + artifacts/dryrun_opt (--variant opt,
+policy fsdp_tp_v2) and prints per-cell step-time bounds = max(three terms),
+plus the speedup of the better variant. Cells where the opt bundle
+regresses (dense-train: repeat-kv) keep the baseline and say so — §Perf
+records why.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def bound(r):
+    t = {
+        "compute": r["flops"] / PEAK,
+        "memory": r["hbm_bytes"] / HBM,
+        "collective": r["collectives"]["wire_total"] / ICI,
+    }
+    dom = max(t, key=t.get)
+    return t, dom
+
+
+def run() -> list[dict]:
+    rows = []
+    for bp in sorted((ART / "dryrun").glob("*.single.fsdp_tp.json")):
+        b = json.loads(bp.read_text())
+        if b.get("status") != "OK":
+            continue
+        variants = {}
+        tag = f"{b['arch']}.{b['shape']}.single.fsdp_tp_v2.opt.json"
+        op = ART / "dryrun_opt" / tag
+        if op.exists():
+            o = json.loads(op.read_text())
+            if o.get("status") == "OK":
+                variants["opt"] = o
+        lean = (ART / "dryrun_opt2" /
+                f"{b['arch']}.{b['shape']}.single.fsdp_tp_v2.absorb+moe.json")
+        if lean.exists():
+            o2 = json.loads(lean.read_text())
+            if o2.get("status") == "OK":
+                variants["absorb+moe"] = o2
+        if not variants:
+            continue
+        tb, domb = bound(b)
+        base_bound = max(tb.values())
+        best_name, best_bound, best_dom = "base", base_bound, domb
+        for name, v in variants.items():
+            tv, domv = bound(v)
+            bb = max(tv.values())
+            if bb < best_bound:
+                best_name, best_bound, best_dom = name, bb, domv
+        rows.append({
+            "arch": b["arch"], "shape": b["shape"],
+            "base_bound_s": base_bound, "base_dom": domb,
+            "opt_bound_s": best_bound, "opt_dom": best_dom,
+            "speedup": base_bound / best_bound,
+            "pick": best_name,
+        })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | baseline bound (s) | optimized bound (s) | "
+           "speedup | picked |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['base_bound_s']:.4g} "
+            f"({r['base_dom']}) | {r['opt_bound_s']:.4g} ({r['opt_dom']}) "
+            f"| {r['speedup']:.2f}× | {r['pick']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown(rows))
+    ups = [r for r in rows if r["speedup"] > 1.05]
+    print(f"\n{len(ups)}/{len(rows)} cells improved >5%; "
+          f"max speedup {max(r['speedup'] for r in rows):.1f}×")

@@ -1,0 +1,138 @@
+"""§Roofline: derive the three terms from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_chip   / 197e12   (bf16 peak / chip)
+    memory term     = HLO_bytes_per_chip   / 819e9    (HBM BW / chip)
+    collective term = wire_bytes_per_chip  / 50e9     (ICI link BW)
+
+All three come from the loop-aware HLO analysis of the compiled partition
+(`launch/hlo_analysis.py` — XLA's own cost_analysis counts scan bodies
+once). MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (inference), with N from
+the parameter tree and MoE activation fractions from expert-tagged axes.
+
+Emits artifacts/roofline.csv and a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Global MODEL_FLOPS for the cell (6·N·D train, 2·N_active·D infer)."""
+    from repro.configs import SHAPES, get_config
+    from repro.launch.steps import model_shapes
+    from repro.models.layers import axes_tree
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    params_sh, p_axes = model_shapes(cfg)
+
+    leaves = jax.tree.leaves(params_sh)
+    axes = jax.tree.leaves(
+        p_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+    total = 0.0
+    active = 0.0
+    for v, a in zip(leaves, axes):
+        n = float(v.size)
+        total += n
+        if "experts" in a and cfg.num_experts:
+            n = n * cfg.top_k / cfg.num_experts
+        if "vocab" in a:
+            n = n / 2  # embeddings/head: one matmul's worth per token
+        active += n
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    if cell.kind == "train":
+        return 6.0 * active * tokens
+    return 2.0 * active * tokens
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    mesh = rec["mesh"]
+    chips = 1
+    for d in mesh.split("x"):
+        chips *= int(d)
+    flops = rec["flops"]                     # per-chip (per-partition HLO)
+    hbm = rec["hbm_bytes"]
+    wire = rec["collectives"]["wire_total"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_chip = mf / chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "hw_frac": t_compute / bound if bound else 0.0,
+        "model_flops_per_chip": mf_chip,
+        "useful_ratio": mf_chip / flops if flops else 0.0,
+        "mfu_bound": (mf_chip / PEAK_FLOPS) / bound if bound else 0.0,
+        "temp_gib": rec.get("memory", {}).get("temp_size_in_bytes", 0)
+        / 2**30,
+    }
+
+
+def run(dryrun_dir: str = "artifacts/dryrun",
+        out_csv: str = "artifacts/roofline.csv") -> list[dict]:
+    rows = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        r = analyze_record(rec)
+        if r is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh", "?"),
+                         "dominant": rec.get("status")})
+            continue
+        rows.append(r)
+    cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "hw_frac", "useful_ratio",
+            "mfu_bound", "temp_gib"]
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(
+            f"{r.get(c, ''):.4g}" if isinstance(r.get(c), float)
+            else str(r.get(c, "")) for c in cols))
+    Path(out_csv).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_csv).write_text("\n".join(lines) + "\n")
+    print(f"wrote {out_csv} ({len(rows)} rows)")
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+           "| dominant | MFU-bound | useful |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "t_compute_s" not in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | {r['dominant']} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | **{r['dominant']}** "
+            f"| {r['mfu_bound']:.3f} | {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown(rows))

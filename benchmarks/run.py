@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig5,table13]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = {
+    "table13": "benchmarks.bench_sota_time",
+    "fig5": "benchmarks.bench_param_sweep",
+    "fig34": "benchmarks.bench_accuracy",
+    "tbl8_12": "benchmarks.bench_kernel_blocks",
+    "fig7a": "benchmarks.bench_order_scaling",
+    "fig7bc": "benchmarks.bench_multidev",
+    "lm_step": "benchmarks.bench_lm_step",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        mod_name = MODULES[name]
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED benches: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benches complete")
+
+
+if __name__ == "__main__":
+    main()

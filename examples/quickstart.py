@@ -1,0 +1,39 @@
+"""Quickstart: decompose a sparse tensor with cuFastTucker-in-JAX.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import FastTuckerConfig, rmse_mae, train
+from repro.core import fasttucker as ft
+from repro.data.synthetic import planted_tensor
+
+
+def main():
+    # a 3-order HOHDST with a planted rank-4 Tucker structure + noise
+    dims = (800, 600, 400)
+    tensor = planted_tensor(dims, nnz=300_000, rank=4, core_rank=4,
+                            noise=0.05, seed=0)
+    train_t, test_t = tensor.split(test_fraction=0.1)
+
+    cfg = FastTuckerConfig(
+        dims=dims,
+        ranks=(4, 4, 4),      # J_n
+        core_rank=4,          # R_core (Kruskal rank of the core tensor)
+        batch_size=4096,      # |Ψ| one-step sampling set
+    )
+
+    state, history = train(
+        jax.random.PRNGKey(0), train_t, cfg,
+        num_steps=800, eval_every=200, test=test_t,
+    )
+    for h in history:
+        print(f"step {h['step']:4d}  RMSE {h['rmse']:.4f}  MAE {h['mae']:.4f}")
+
+    rmse, mae = rmse_mae(state.params, test_t, ft.predict)
+    print(f"\nfinal: RMSE {float(rmse):.4f} (noise floor ≈ 0.05)")
+    assert float(rmse) < 0.25
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Sharded checkpointing: two-phase commit, async writes, elastic resume.
+
+Layout (orbax-free, npz-per-leaf):
+
+    <dir>/step_000123.tmp/        # written first
+        manifest.json             # tree structure + shapes + dtypes
+        leaf_000000.npy ...
+    <dir>/step_000123/            # atomic rename = commit
+
+Restore tolerates a DIFFERENT device topology than the writer (elastic
+resume): arrays are loaded on host and re-placed with whatever shardings
+the new mesh dictates. ``keep`` bounds disk usage; writes can run on a
+background thread (training continues — fault tolerance requires the
+checkpoint cadence to hide write latency).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
+        treedef = jax.tree.structure(tree)
+        if blocking:
+            self._write(step, host_leaves, treedef)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, treedef),
+                daemon=True,
+            )
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, leaves: list, treedef) -> None:
+        tmp = self.dir / f"step_{step:09d}.tmp"
+        final = self.dir / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "num_leaves": len(leaves),
+            "written_at": time.time(),
+            "leaves": [
+                {"shape": list(x.shape), "dtype": str(x.dtype)}
+                for x in leaves
+            ],
+        }
+        for i, x in enumerate(leaves):
+            np.save(tmp / f"leaf_{i:06d}.npy", x)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)          # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") \
+                    and not p.name.endswith(".tmp"):
+                out.append(int(p.name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        """Load into the structure of ``like``; re-place per ``shardings``
+        (elastic: the writing mesh need not match the reading mesh)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = _flatten(like)
+        assert manifest["num_leaves"] == len(leaves), (
+            f"checkpoint has {manifest['num_leaves']} leaves, "
+            f"expected {len(leaves)} — incompatible state structure"
+        )
+        loaded = [
+            np.load(d / f"leaf_{i:06d}.npy") for i in range(len(leaves))
+        ]
+        if shardings is not None:
+            sh_leaves = jax.tree.leaves(shardings)
+            loaded = [
+                jax.device_put(x, s) for x, s in zip(loaded, sh_leaves)
+            ]
+        else:
+            loaded = [jax.numpy.asarray(x) for x in loaded]
+        return jax.tree.unflatten(treedef, loaded), step

@@ -1,0 +1,4 @@
+from .base import ARCH_IDS, SHAPES, ModelConfig, ShapeCell, get_config, list_archs
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeCell", "get_config",
+           "list_archs"]

@@ -1,0 +1,146 @@
+"""Architecture config schema + shape cells + registry."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense|moe|vlm|ssm|hybrid|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 → d_model // num_heads
+
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+
+    # MLA (deepseek-v2)
+    use_mla: bool = False
+    mla_absorb: bool = False         # absorbed decode (perf variant)
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0           # leading dense-FFN layers (deepseek-v2)
+    dense_d_ff: int = 0              # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_softmax_then_topk: bool = False
+    norm_topk_prob: bool = True
+
+    # mixer pattern
+    mixer: str = "gqa"               # gqa|mla|mamba2|xlstm
+    slstm_every: int = 0             # xlstm: every k-th layer is sLSTM
+    shared_attn_every: int = 0       # zamba2: shared block every k layers
+
+    # ssm (mamba2)
+    ssm_state_size: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # xlstm
+    mlstm_inner: int = 0             # 0 → 2·d_model
+    xlstm_conv: int = 4
+    mlstm_chunk: int = 256           # chunked mLSTM above this seq length
+
+    # structure
+    encoder_only: bool = False
+    frontend: Optional[str] = None   # None|"audio"|"vision"
+    frontend_dim: int = 0
+    num_patches: int = 256           # vlm: patch positions per sample
+    norm_type: str = "rmsnorm"
+    activation: str = "silu"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # numerics / memory
+    dtype: str = "bfloat16"
+    remat: str = "block"             # none|block
+    mixed_precision: bool = False    # cast f32 params→bf16 at use (perf #3)
+    moe_sharded: bool = False        # shard_map expert-parallel MoE island
+    repeat_kv: bool = False          # train-path GQA: repeat kv to H heads
+                                     # (avoids (Kv,G) resharding gathers)
+
+    # paper-technique integration: Tucker-compress MLP weights
+    tucker_rank: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.num_heads, 1))
+        if self.mixer == "xlstm" and self.mlstm_inner == 0:
+            object.__setattr__(self, "mlstm_inner", 2 * self.d_model)
+
+    # ---- derived ----
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.mixer in ("mamba2", "xlstm")
+
+    @property
+    def has_decode(self) -> bool:
+        return not self.encoder_only
+
+    def supports_shape(self, shape_name: str) -> tuple[bool, str]:
+        """(supported, reason-if-not) for the assignment's skip rules."""
+        if shape_name in ("decode_32k", "long_500k") and self.encoder_only:
+            return False, "SKIP(encoder-only)"
+        if shape_name == "long_500k" and not self.sub_quadratic:
+            return False, "SKIP(full-attn)"
+        return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "deepseek_v2_lite_16b",
+    "qwen3_moe_30b_a3b",
+    "internvl2_2b",
+    "xlstm_125m",
+    "zamba2_1p2b",
+    "hubert_xlarge",
+    "qwen3_14b",
+    "deepseek_67b",
+    "qwen2_5_14b",
+    "starcoder2_15b",
+]
+
+
+def get_config(arch_id: str, reduced: bool = False) -> ModelConfig:
+    """Load ``src/repro/configs/<arch_id>.py`` → CONFIG (or REDUCED)."""
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,22 @@
+"""xLSTM-125M  [arXiv:2405.04517] — mLSTM + sLSTM blocks, no separate FFN.
+
+12L d_model=768 4H vocab=50304, d_ff=0 (block-internal projections).
+sLSTM every 4th layer (9 mLSTM : 3 sLSTM ≈ the paper's mostly-mLSTM mix).
+Runs long_500k (recurrent decode, O(1)/token).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="xlstm_125m", family="ssm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    mixer="xlstm", slstm_every=4,
+)
+
+REDUCED = ModelConfig(
+    arch_id="xlstm_125m", family="ssm",
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=512,
+    mixer="xlstm", slstm_every=4,
+    dtype="float32", remat="none",
+)

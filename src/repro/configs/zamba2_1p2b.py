@@ -1,0 +1,26 @@
+"""Zamba2-1.2B  [arXiv:2411.15242; hf] — Mamba2 backbone + shared attn.
+
+38L d_model=2048, ssm_state=64; one weight-tied attention+MLP block
+(32 heads at width 2·d, d_ff=8192) invoked every 6th layer on
+concat(hidden, original embeddings), projected back per-invocation.
+Runs long_500k (SSM decode).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2_1p2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000,
+    mixer="mamba2", shared_attn_every=6,
+    ssm_state_size=64, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+)
+
+REDUCED = ModelConfig(
+    arch_id="zamba2_1p2b", family="hybrid",
+    num_layers=7, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=512,
+    mixer="mamba2", shared_attn_every=6,
+    ssm_state_size=16, ssm_expand=2, ssm_head_dim=16, ssm_groups=1,
+    ssm_chunk=32,
+    dtype="float32", remat="none",
+)

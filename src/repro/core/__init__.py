@@ -1,0 +1,34 @@
+"""Core: the paper's contribution — FastTucker STD with Kruskal core + SGD."""
+from .sptensor import SparseTensor, BlockPartition, partition_for_workers
+from .fasttucker import (
+    FastTuckerConfig,
+    FastTuckerParams,
+    TrainState,
+    batch_gradients,
+    dynamic_lr,
+    init_params,
+    init_state,
+    predict,
+    sampled_loss,
+    sgd_step,
+    train,
+)
+from .metrics import rmse_mae
+
+__all__ = [
+    "SparseTensor",
+    "BlockPartition",
+    "partition_for_workers",
+    "FastTuckerConfig",
+    "FastTuckerParams",
+    "TrainState",
+    "batch_gradients",
+    "dynamic_lr",
+    "init_params",
+    "init_state",
+    "predict",
+    "sampled_loss",
+    "sgd_step",
+    "train",
+    "rmse_mae",
+]

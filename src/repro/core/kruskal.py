@@ -1,0 +1,115 @@
+"""Kruskal (CP) core-tensor machinery + Theorem 1/2 contractions.
+
+The paper approximates the Tucker core ``G ∈ R^{J_1×…×J_N}`` by a rank-R_core
+Kruskal product of ``B^(n) ∈ R^{J_n × R_core}`` (Eq. 9). Theorems 1 and 2 let
+every Kronecker-structured contraction factor into mode-wise small matmuls.
+
+All functions take ``core_factors`` as a tuple of ``(J_n, R)`` arrays and
+per-sample gathered factor rows as a tuple of ``(B, J_n)`` arrays (modes may
+have different J_n — we keep tuples, not stacked arrays, at this reference
+level; the Pallas kernel uses a padded stacked layout).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def kruskal_to_core(core_factors: Sequence[jax.Array]) -> jax.Array:
+    """Materialize Ĝ = Σ_r b_r^(1) ∘ … ∘ b_r^(N)  (tests / tiny shapes)."""
+    N = len(core_factors)
+    R = core_factors[0].shape[1]
+    letters = "abcdefghijklmnop"[:N]
+    operands = []
+    subs = []
+    for n, b in enumerate(core_factors):
+        operands.append(b)
+        subs.append(f"{letters[n]}r")
+    expr = ",".join(subs) + "->" + letters
+    return jnp.einsum(expr, *operands)
+
+
+def mode_dots(
+    rows: Sequence[jax.Array], core_factors: Sequence[jax.Array]
+) -> jax.Array:
+    """c_r^(n) = ⟨a_{i_n}, b_{:,r}^(n)⟩ for a batch.  -> (N, B, R).
+
+    This is the paper's line-6/23 hot loop (warp-shuffle dot products),
+    expressed as N batched matmuls (B,J_n)·(J_n,R).
+    """
+    return jnp.stack([r @ b for r, b in zip(rows, core_factors)], axis=0)
+
+
+def exclusive_products(c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Given c: (N, B, R), return (full_prod (B,R), excl (N,B,R)).
+
+    excl[n] = Π_{k≠n} c[k], computed division-free with prefix/suffix
+    products (stable when some c ≈ 0).
+    """
+    N = c.shape[0]
+    ones = jnp.ones_like(c[0])
+    # prefix[n] = Π_{k<n} c[k]; suffix[n] = Π_{k>n} c[k]
+    prefix = jnp.concatenate(
+        [ones[None], jnp.cumprod(c[:-1], axis=0)], axis=0
+    )
+    suffix = jnp.concatenate(
+        [jnp.cumprod(c[:0:-1], axis=0)[::-1], ones[None]], axis=0
+    )
+    excl = prefix * suffix
+    full = excl[0] * c[0]
+    return full, excl
+
+
+def predict_from_rows(
+    rows: Sequence[jax.Array], core_factors: Sequence[jax.Array]
+) -> jax.Array:
+    """x̂ = Σ_r Π_n c_r^(n)   (Theorem-1 factored prediction).  -> (B,)"""
+    c = mode_dots(rows, core_factors)
+    full, _ = exclusive_products(c)
+    return jnp.sum(full, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 / Theorem 2 reference forms (used by property tests)
+# ---------------------------------------------------------------------------
+
+def kron_vec(vectors: Sequence[jax.Array]) -> jax.Array:
+    """x^(N) ⊗ … ⊗ x^(1) for a list ordered [x^(1), …, x^(N)] (paper order)."""
+    out = vectors[-1]
+    for v in reversed(vectors[:-1]):
+        out = jnp.kron(out, v)
+    return out
+
+
+def kron_mat(mats: Sequence[jax.Array]) -> jax.Array:
+    """Y^(N) ⊗ … ⊗ Y^(1) for a list ordered [Y^(1), …, Y^(N)]."""
+    out = mats[-1]
+    for m in reversed(mats[:-1]):
+        out = jnp.kron(out, m)
+    return out
+
+
+def theorem1_lhs(xs: Sequence[jax.Array], ys: Sequence[jax.Array]) -> jax.Array:
+    """(⊗ x)(⊗ y)^T — the exponential-cost form."""
+    return kron_vec(xs) @ kron_vec(ys)
+
+
+def theorem1_rhs(xs: Sequence[jax.Array], ys: Sequence[jax.Array]) -> jax.Array:
+    """Π_n x^(n) y^(n)T — the linear-cost form."""
+    out = jnp.asarray(1.0, dtype=xs[0].dtype)
+    for x, y in zip(xs, ys):
+        out = out * (x @ y)
+    return out
+
+
+def theorem2_lhs(xs: Sequence[jax.Array], Ys: Sequence[jax.Array]) -> jax.Array:
+    """(⊗ x)(⊗ Y)^T — exponential form. Ys[n]: (J_n, I_n)."""
+    return kron_vec(xs) @ kron_mat(Ys).T
+
+
+def theorem2_rhs(xs: Sequence[jax.Array], Ys: Sequence[jax.Array]) -> jax.Array:
+    """⊗_n (x^(n) Y^(n)T) — linear form (ordered to match kron_vec)."""
+    return kron_vec([x @ Y.T for x, Y in zip(xs, Ys)])

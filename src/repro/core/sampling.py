@@ -1,0 +1,45 @@
+"""One-step stochastic sampling sets Ψ (paper Definition 6 / Section 4).
+
+Every update step draws ``|Ψ|`` nonzeros uniformly from Ω and approximates
+the full gradient with the sampled one. JAX requires static shapes, so the
+sample size is a compile-time constant and sampling is a ``random.randint``
+gather — O(|Ψ|) with no host round-trip (GPU paper does the same with a
+device-side RNG).
+
+Two flavors:
+  * ``sample_batch``            — i.i.d. with replacement (paper's default).
+  * ``epoch_permutation_batches`` — shuffled epoch cover for evaluation runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sptensor import SparseTensor
+
+
+def sample_batch(
+    key: jax.Array, tensor: SparseTensor, batch_size: int
+) -> tuple[jax.Array, jax.Array]:
+    """Draw Ψ: returns (indices (B,N), values (B,))."""
+    pick = jax.random.randint(key, (batch_size,), 0, tensor.nnz)
+    return tensor.indices[pick], tensor.values[pick]
+
+
+def sample_batch_arrays(
+    key: jax.Array, indices: jax.Array, values: jax.Array, batch_size: int
+) -> tuple[jax.Array, jax.Array]:
+    """Same as ``sample_batch`` on raw arrays (shard_map-friendly)."""
+    pick = jax.random.randint(key, (batch_size,), 0, values.shape[0])
+    return indices[pick], values[pick]
+
+
+def epoch_permutation_batches(
+    key: jax.Array, nnz: int, batch_size: int
+) -> jax.Array:
+    """Permutation of 0..nnz-1 padded+reshaped to (num_batches, B)."""
+    perm = jax.random.permutation(key, nnz)
+    num_batches = -(-nnz // batch_size)
+    pad = num_batches * batch_size - nnz
+    perm = jnp.concatenate([perm, perm[:pad]])
+    return perm.reshape(num_batches, batch_size)

@@ -1,0 +1,210 @@
+"""COO container for High-Order High-Dimension Sparse Tensors (HOHDST).
+
+The paper's data model: an N-order sparse tensor ``X`` given on an index set
+``Omega`` (|Omega| = nnz). We keep a static-shape COO layout
+
+    indices : (nnz, N) int32   -- one column per mode
+    values  : (nnz,)   float32
+
+plus the dense mode sizes ``dims = (I_1, ..., I_N)``.
+
+Also implements the paper's Section 5.3 workload partitioning: each mode is
+cut into ``M`` ranges, producing ``M**N`` blocks; a *stratum* is a set of M
+blocks whose per-mode block indices are pairwise distinct (a "generalized
+diagonal"), so the M workers of a stratum touch disjoint factor-row ranges —
+conflict-free. There are ``M**(N-1)`` strata covering all blocks (Latin
+hypercube schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseTensor:
+    """Static-shape COO sparse tensor."""
+
+    indices: jax.Array  # (nnz, N) int32
+    values: jax.Array   # (nnz,) float
+    dims: tuple[int, ...]  # static
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.values), self.dims
+
+    @classmethod
+    def tree_unflatten(cls, dims, children):
+        indices, values = children
+        return cls(indices=indices, values=values, dims=dims)
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def density(self) -> float:
+        total = float(np.prod([float(d) for d in self.dims]))
+        return self.nnz / total
+
+    # -- conversion ----------------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        """Materialize (tiny tensors only — tests)."""
+        dense = jnp.zeros(self.dims, dtype=self.values.dtype)
+        return dense.at[tuple(self.indices[:, n] for n in range(self.order))].add(
+            self.values
+        )
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray, threshold: float = 0.0) -> "SparseTensor":
+        dense = np.asarray(dense)
+        idx = np.argwhere(np.abs(dense) > threshold).astype(np.int32)
+        vals = dense[tuple(idx.T)].astype(np.float32)
+        return cls(jnp.asarray(idx), jnp.asarray(vals), tuple(dense.shape))
+
+    # -- train/test split -----------------------------------------------------
+    def split(self, test_fraction: float, seed: int = 0):
+        """Random split into (train, test=Gamma) like the paper's |Γ|."""
+        rng = np.random.default_rng(seed)
+        nnz = self.nnz
+        perm = rng.permutation(nnz)
+        n_test = int(nnz * test_fraction)
+        test_ids, train_ids = perm[:n_test], perm[n_test:]
+        idx = np.asarray(self.indices)
+        val = np.asarray(self.values)
+        mk = lambda ids: SparseTensor(
+            jnp.asarray(idx[ids]), jnp.asarray(val[ids]), self.dims
+        )
+        return mk(train_ids), mk(test_ids)
+
+
+# ---------------------------------------------------------------------------
+# Section 5.3: M**N block partition + conflict-free strata schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockPartition:
+    """The paper's M-way per-mode cut of an N-order tensor.
+
+    ``block_of(indices)`` maps each nonzero to its N-digit block coordinate;
+    ``strata(M, N)`` enumerates the conflict-free schedule: stratum ``s``
+    assigns worker ``m`` the block whose mode-n digit is
+    ``(m + s_n) mod M`` for digits ``s_n`` of ``s`` in base M. Workers within
+    a stratum then own pairwise-distinct digits in *every* mode (each digit
+    sequence is a shift of the identity), hence disjoint factor-row ranges.
+    """
+
+    dims: tuple[int, ...]
+    num_workers: int  # M
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    def mode_boundaries(self, n: int) -> np.ndarray:
+        """M+1 boundaries of mode n ranges (balanced)."""
+        return np.linspace(0, self.dims[n], self.num_workers + 1).astype(np.int64)
+
+    def block_digit(self, n: int, coords: np.ndarray) -> np.ndarray:
+        """Digit (0..M-1) of each coordinate along mode n."""
+        bounds = self.mode_boundaries(n)[1:-1]
+        return np.searchsorted(bounds, coords, side="right")
+
+    def block_of(self, indices: np.ndarray) -> np.ndarray:
+        """(nnz, N) -> (nnz, N) block digits."""
+        indices = np.asarray(indices)
+        return np.stack(
+            [self.block_digit(n, indices[:, n]) for n in range(self.order)], axis=1
+        )
+
+    def strata(self) -> np.ndarray:
+        """All strata: shape (M**(N-1), M, N).
+
+        ``strata()[s, m]`` is the N-digit block coordinate handled by worker
+        ``m`` during stratum ``s``. Mode 0 digit is always ``m`` (anchor);
+        remaining modes are shifted by the base-M digits of ``s``.
+        """
+        M, N = self.num_workers, self.order
+        n_strata = M ** (N - 1)
+        out = np.zeros((n_strata, M, N), dtype=np.int64)
+        for s in range(n_strata):
+            digits = np.zeros(N, dtype=np.int64)
+            rem = s
+            for n in range(1, N):
+                digits[n] = rem % M
+                rem //= M
+            for m in range(M):
+                out[s, m, 0] = m
+                for n in range(1, N):
+                    out[s, m, n] = (m + digits[n]) % M
+        return out
+
+    def assign(self, indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Map nonzeros to (stratum, worker).
+
+        Returns (stratum_id, worker_id) per nonzero. Inverse of ``strata``:
+        worker = digit_0; stratum digits s_n = (digit_n - digit_0) mod M.
+        """
+        digits = self.block_of(indices)  # (nnz, N)
+        M, N = self.num_workers, self.order
+        worker = digits[:, 0]
+        stratum = np.zeros(len(digits), dtype=np.int64)
+        mult = 1
+        for n in range(1, N):
+            sn = (digits[:, n] - worker) % M
+            stratum += sn * mult
+            mult *= M
+        return stratum, worker
+
+
+def partition_for_workers(
+    tensor: SparseTensor, num_workers: int, pad_multiple: int = 8
+) -> dict:
+    """Bucket nonzeros by (stratum, worker) with equal padded sizes.
+
+    Returns dict with:
+      indices : (S, M, L, N) int32  -- padded per-bucket COO indices
+      values  : (S, M, L)  float32
+      mask    : (S, M, L)  bool     -- valid entries
+    where S = M**(N-1) strata and L = padded max bucket length. Padding rows
+    point at row 0 of each mode with value 0 and mask False (no-op updates).
+    """
+    part = BlockPartition(tensor.dims, num_workers)
+    idx = np.asarray(tensor.indices)
+    val = np.asarray(tensor.values)
+    stratum, worker = part.assign(idx)
+    S = num_workers ** (tensor.order - 1)
+    M = num_workers
+    buckets = [[[] for _ in range(M)] for _ in range(S)]
+    for e, (s, m) in enumerate(zip(stratum, worker)):
+        buckets[s][m].append(e)
+    L = max(1, max(len(b) for row in buckets for b in row))
+    L = ((L + pad_multiple - 1) // pad_multiple) * pad_multiple
+    N = tensor.order
+    out_idx = np.zeros((S, M, L, N), dtype=np.int32)
+    out_val = np.zeros((S, M, L), dtype=np.float32)
+    out_mask = np.zeros((S, M, L), dtype=bool)
+    for s in range(S):
+        for m in range(M):
+            ids = buckets[s][m]
+            k = len(ids)
+            if k:
+                out_idx[s, m, :k] = idx[ids]
+                out_val[s, m, :k] = val[ids]
+                out_mask[s, m, :k] = True
+    return {
+        "indices": jnp.asarray(out_idx),
+        "values": jnp.asarray(out_val),
+        "mask": jnp.asarray(out_mask),
+        "partition": part,
+    }

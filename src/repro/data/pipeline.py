@@ -1,0 +1,88 @@
+"""Deterministic sharded data pipelines.
+
+``TokenPipeline`` — synthetic-corpus LM batches: deterministic per (seed,
+step, shard), so elastic restarts replay identical data regardless of how
+many hosts participate (each host materializes only its shard slice).
+
+``TensorStream`` — streams sampling-set batches for the STD engine with the
+same replay property.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # synthetic corpus: Zipf-ish unigram + bigram mixture so losses move
+    zipf_a: float = 1.2
+
+
+class TokenPipeline:
+    """Deterministic synthetic LM token stream (host-side numpy)."""
+
+    def __init__(self, cfg: TokenPipelineConfig,
+                 shard: int = 0, num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.shard = shard
+        self.num_shards = num_shards
+        self.local_batch = cfg.global_batch // num_shards
+        # fixed unigram distribution (vocab-sized)
+        rng = np.random.default_rng(cfg.seed)
+        w = rng.zipf(cfg.zipf_a, size=cfg.vocab_size * 4) % cfg.vocab_size
+        hist = np.bincount(w, minlength=cfg.vocab_size).astype(np.float64)
+        self.probs = hist / hist.sum()
+
+    def batch(self, step: int) -> dict:
+        """Batch for ``step`` — identical across runs / topologies."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed, step, self.shard, 0xBEEF))
+        toks = rng.choice(
+            cfg.vocab_size, p=self.probs,
+            size=(self.local_batch, cfg.seq_len + 1),
+        ).astype(np.int32)
+        # light bigram structure: every even position correlates w/ previous
+        toks[:, 2::2] = (toks[:, 1:-1:2] * 31 + 7) % cfg.vocab_size
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+        }
+
+    def global_batch(self, step: int) -> dict:
+        """All shards concatenated (single-host testing)."""
+        parts = [
+            TokenPipeline(self.cfg, s, self.num_shards).batch(step)
+            for s in range(self.num_shards)
+        ]
+        return {
+            k: np.concatenate([p[k] for p in parts], axis=0)
+            for k in parts[0]
+        }
+
+
+class TensorStream:
+    """Deterministic Ψ-batch stream for STD (indices into a fixed Ω)."""
+
+    def __init__(self, nnz: int, batch_size: int, seed: int = 0,
+                 shard: int = 0, num_shards: int = 1):
+        self.nnz = nnz
+        self.batch_size = batch_size
+        self.seed = seed
+        self.shard = shard
+        self.num_shards = num_shards
+
+    def picks(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            (self.seed, step, self.shard, 0xFA57))
+        return rng.integers(0, self.nnz, size=self.batch_size,
+                            dtype=np.int64)

@@ -1,0 +1,91 @@
+"""Ambient activation-sharding context.
+
+Model code is mesh-agnostic; the launcher can install a constraint applied
+to the residual stream at block boundaries (Megatron-style sequence
+parallelism: saved activations shard over the `model` axis, cutting
+remat-saved bytes by the TP degree). Default: no-op.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+_CONSTRAIN: Optional[Callable] = None
+_CONSTRAIN_LOGITS: Optional[Callable] = None
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    """Install the active mesh for manual-sharding islands (MoE)."""
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh():
+    return _MESH
+
+
+def set_activation_constraint(fn: Optional[Callable]) -> None:
+    global _CONSTRAIN
+    _CONSTRAIN = fn
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    if _CONSTRAIN is None:
+        return x
+    return _CONSTRAIN(x)
+
+
+def set_logits_constraint(fn: Optional[Callable]) -> None:
+    global _CONSTRAIN_LOGITS
+    _CONSTRAIN_LOGITS = fn
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    if _CONSTRAIN_LOGITS is None:
+        return x
+    return _CONSTRAIN_LOGITS(x)
+
+
+def make_logits_constraint(mesh, batch: int, vocab: int):
+    """Shard (B, S, V) logits: batch→(pod,data), vocab→model."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    bsize = int(np.prod([sizes[a] for a in baxes]))
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) if batch % bsize == 0 \
+        else None
+    vspec = "model" if vocab % sizes.get("model", 1) == 0 else None
+    sharding = NamedSharding(mesh, P(bspec, None, vspec))
+
+    def fn(x):
+        if x.ndim == 3 and x.shape[0] == batch and x.shape[-1] == vocab:
+            return jax.lax.with_sharding_constraint(x, sharding)
+        return x
+
+    return fn
+
+
+def make_seq_constraint(mesh, batch: int, seq: int, policy: str = "fsdp_tp"):
+    """Shard (B, S, D) activations: batch→(pod,data), seq→model (if divisible)."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    bsize = int(np.prod([sizes[a] for a in baxes]))
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) if batch % bsize == 0 \
+        else None
+    sspec = "model" if seq % sizes.get("model", 1) == 0 else None
+    spec = P(bspec, sspec)
+    sharding = NamedSharding(mesh, spec)
+
+    def fn(x):
+        if x.ndim == 3 and x.shape[0] == batch and x.shape[1] == seq:
+            return jax.lax.with_sharding_constraint(x, sharding)
+        return x
+
+    return fn

@@ -1,0 +1,194 @@
+"""Logical-axis → mesh-axis rules and NamedSharding construction.
+
+Each parameter/cache leaf carries logical axis names (see models.layers).
+Rules map logical names to mesh axes; a rule is applied per-leaf only when
+the dimension is divisible by the mesh-axis extent (otherwise that dim is
+replicated) and no mesh axis is used twice in one PartitionSpec.
+
+Two built-in policies:
+  * ``tp``       — tensor parallelism only: heads/mlp/experts/vocab on
+                   `model`; everything else replicated per data shard.
+  * ``fsdp_tp``  — additionally shard the `embed` axis over `data`
+                   (ZeRO-3/FSDP via GSPMD); optimizer moments inherit it,
+                   which is what lets 67B+ models fit 16 GB chips.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+RULES_TP: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "cache_batch": ("pod", "data"),
+}
+
+RULES_FSDP_TP = dict(RULES_TP, embed=("data",))
+
+# v2 (hillclimb #2): when kv_heads doesn't divide the model axis the KV
+# cache would replicate 16× — fall back to sharding head_dim (contracting
+# dim → GSPMD inserts a small psum per step) and shard the MLA latent dim.
+RULES_FSDP_TP_V2 = dict(
+    RULES_FSDP_TP,
+    head_dim_kv=("model",),
+    kv_lora=("model",),
+)
+
+# zero3 (hillclimb pair 3): drop tensor parallelism for dense-train cells —
+# per-layer TP activation all-reduces (~10 GiB/layer on deepseek-67B)
+# outweigh the FSDP weight gathers they replace. Params/moments shard over
+# data (ZeRO-3); vocab stays on `model` (logits memory); the free `model`
+# axis carries sequence-parallel activations.
+RULES_ZERO3 = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": ("data",),
+    "cache_batch": ("pod", "data"),
+    "mlp": (),
+    "heads": (),
+    "kv_heads": (),
+    "experts": ("model",),   # EP stays: expert FFNs would replicate
+}
+
+# zero3_dp: additionally run data-parallel over the `model` axis too
+# (microbatch 1/chip at GB=256 on 16×16) — activations never need SP
+# gathers; the only collectives left are ZeRO weight gathers + grad
+# reductions.
+RULES_ZERO3_DP = dict(RULES_ZERO3, batch=("pod", "data", "model"),
+                      cache_batch=("pod", "data", "model"))
+
+POLICIES = {"tp": RULES_TP, "fsdp_tp": RULES_FSDP_TP,
+            "fsdp_tp_v2": RULES_FSDP_TP_V2, "zero3": RULES_ZERO3,
+            "zero3_dp": RULES_ZERO3_DP}
+
+BATCH_AXES_BY_POLICY = {
+    "zero3_dp": ("pod", "data", "model"),
+}
+
+
+def spec_for(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str, tuple[str, ...]],
+) -> P:
+    """Build a PartitionSpec honoring divisibility + axis-uniqueness."""
+    used: set[str] = set()
+    entries: list[Any] = []
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(shape, axes):
+        assign: tuple[str, ...] = ()
+        if name is not None and name in rules:
+            cand = tuple(
+                a for a in rules[name]
+                if a in mesh_sizes and a not in used
+            )
+            total = int(np.prod([mesh_sizes[a] for a in cand])) if cand else 1
+            if cand and dim % total == 0 and dim >= total:
+                assign = cand
+                used.update(cand)
+        if len(assign) == 0:
+            entries.append(None)
+        elif len(assign) == 1:
+            entries.append(assign[0])
+        else:
+            entries.append(assign)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for_tree(
+    axes_tree: Any,
+    shape_tree: Any,
+    mesh: Mesh,
+    policy: str = "fsdp_tp",
+) -> Any:
+    """Tree of NamedShardings matching (axes, shapes)."""
+    rules = POLICIES[policy]
+
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+
+    return jax.tree.map(
+        lambda ax, sd: NamedSharding(mesh, spec_for(ax, sd.shape, mesh, rules)),
+        axes_tree,
+        shape_tree,
+        is_leaf=is_axes_leaf,
+    )
+
+
+def batch_spec(mesh: Mesh, batch_size: int, extra_dims: int = 1,
+               policy: str = "fsdp_tp") -> P:
+    """Shard leading batch dim over the policy's batch axes when divisible."""
+    wanted = BATCH_AXES_BY_POLICY.get(policy, ("pod", "data"))
+    axes = tuple(a for a in mesh.axis_names if a in wanted)
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([mesh_sizes[a] for a in axes]))
+    if batch_size % total != 0:
+        return P(*([None] * (1 + extra_dims)))
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * extra_dims))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# Cache leaves use positional axis conventions (see launch.steps):
+CACHE_AXES = {
+    # attention caches ("head_dim_kv"/"kv_lora" only bind under *_v2 rules)
+    "k": ("cache_batch", None, "kv_heads", "head_dim_kv"),
+    "v": ("cache_batch", None, "kv_heads", "head_dim_kv"),
+    "c_kv": ("cache_batch", None, "kv_lora"),
+    "k_pe": ("cache_batch", None, None),
+    # ssm caches
+    "conv": ("cache_batch", None, "mlp"),
+    "ssm": ("cache_batch", "heads", None, None),
+    "C": ("cache_batch", "heads", None, None),
+    "n": ("cache_batch", "heads", None),
+    "m": ("cache_batch", "heads"),
+    "c": ("cache_batch", "heads", None),
+    "h": ("cache_batch", "heads", None),
+}
+
+
+def cache_axes_tree(cache: Any) -> Any:
+    """Assign logical axes to a cache pytree by leaf key name.
+
+    Scanned groups prepend a layer axis — detected by ndim mismatch and
+    padded with a leading None.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if isinstance(v, dict):
+                    out[k] = walk(v)
+                elif isinstance(v, (list, tuple)):
+                    out[k] = type(v)(walk(e) for e in v)
+                else:
+                    ax = CACHE_AXES.get(k, None)
+                    if ax is None:
+                        out[k] = tuple([None] * v.ndim)
+                    else:
+                        pad = v.ndim - len(ax)
+                        out[k] = tuple([None] * pad) + tuple(ax)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(e) for e in node)
+        if node is None:
+            return None
+        return tuple([None] * node.ndim)
+
+    return walk(cache)

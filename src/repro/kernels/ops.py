@@ -1,0 +1,76 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the kernel
+body executes in Python, validated against ``ref.py``); on TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1) to
+compile via Mosaic.
+
+``kruskal_contract`` accepts the core library's tuple-of-modes layout
+(per-mode (B, J_n) rows and (J_n, R) factors with possibly distinct J_n),
+zero-pads to the stacked (N, B, J) kernel layout, and unpads results —
+zero padding is exact for dot products.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kruskal_contract import kruskal_contract as _kc_kernel
+from .scatter_accum import scatter_accum as _sa_kernel
+from .tucker_matmul import tucker_matmul as _tm_kernel
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _stack_padded(rows: Sequence[jax.Array]) -> jax.Array:
+    jmax = max(r.shape[-1] for r in rows)
+    return jnp.stack(
+        [jnp.pad(r, ((0, 0), (0, jmax - r.shape[-1]))) for r in rows], axis=0
+    )
+
+
+def kruskal_contract(
+    rows: Sequence[jax.Array],          # per-mode (B, J_n)
+    core_factors: Sequence[jax.Array],  # per-mode (J_n, R)
+    *,
+    block_b: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """(pred (B,), pexc (N, B, R)) via the fused Pallas kernel."""
+    a = _stack_padded(rows)
+    jmax = a.shape[-1]
+    b = jnp.stack(
+        [
+            jnp.pad(cf, ((0, jmax - cf.shape[0]), (0, 0)))
+            for cf in core_factors
+        ],
+        axis=0,
+    )
+    return _kc_kernel(a, b, block_b=block_b, interpret=INTERPRET)
+
+
+def scatter_accum(
+    grads: jax.Array, idx: jax.Array, num_rows: int,
+    *, block_i: int = 256, block_b: int = 512,
+) -> jax.Array:
+    return _sa_kernel(
+        grads, idx, num_rows,
+        block_i=block_i, block_b=block_b, interpret=INTERPRET,
+    )
+
+
+def tucker_matmul(
+    x: jax.Array, u1: jax.Array, g: jax.Array, u2: jax.Array,
+    *, block_m: int = 256, block_n: int = 512, block_k: int = 512,
+) -> jax.Array:
+    return _tm_kernel(
+        x, u1, g, u2,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=INTERPRET,
+    )
+
+
+__all__ = ["kruskal_contract", "scatter_accum", "tucker_matmul", "ref"]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kruskal_contract_ref(
+    a_rows: jax.Array,  # (N, B, J)  gathered factor rows (J zero-padded)
+    b_fac: jax.Array,   # (N, J, R)  Kruskal core factors (zero-padded)
+) -> tuple[jax.Array, jax.Array]:
+    """Theorem-1 contraction: pred (B,), exclusive products (N, B, R).
+
+    c[n] = a_rows[n] @ b_fac[n]; pexc[n] = Π_{k≠n} c[k]; pred = Σ_r Π_n c[n].
+    """
+    c = jnp.einsum("nbj,njr->nbr", a_rows, b_fac)
+    N = c.shape[0]
+    ones = jnp.ones_like(c[0])
+    prefix = jnp.concatenate([ones[None], jnp.cumprod(c[:-1], 0)], 0)
+    suffix = jnp.concatenate([jnp.cumprod(c[:0:-1], 0)[::-1], ones[None]], 0)
+    pexc = prefix * suffix
+    pred = jnp.sum(pexc[0] * c[0], axis=-1)
+    return pred, pexc
+
+
+def scatter_accum_ref(
+    grads: jax.Array,   # (B, J) per-sample row gradients
+    idx: jax.Array,     # (B,)  target rows
+    num_rows: int,
+) -> jax.Array:
+    """Exact segment-sum scatter into (num_rows, J)."""
+    return jax.ops.segment_sum(grads, idx, num_segments=num_rows)
+
+
+def tucker_matmul_ref(
+    x: jax.Array,   # (M, K)
+    u1: jax.Array,  # (K, R1)
+    g: jax.Array,   # (R1, R2)
+    u2: jax.Array,  # (N, R2)
+) -> jax.Array:
+    """y = ((x U1) G) U2ᵀ — Tucker-2 factorized linear layer."""
+    return ((x @ u1) @ g) @ u2.T
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Oracle for the flash-attention kernel. q/k/v: (BH, S, D)."""
+    D = q.shape[-1]
+    logits = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(D)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)

@@ -1,0 +1,399 @@
+"""Loop-aware HLO cost model (post-SPMD, per-partition).
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so
+any scanned layer stack / chunked-attention loop is undercounted by its trip
+count. This module parses ``compiled.as_text()`` and computes:
+
+  * flops            — 2·M·N·K for dots, |shape| per elementwise arith op,
+                       recursing through fusions/calls, multiplying while
+                       bodies by ``known_trip_count``;
+  * transcendentals  — exp/log/tanh/… ops;
+  * collective bytes — per collective kind: operand bytes (assignment's
+                       formula) and ring-model wire bytes, trip-multiplied;
+  * hbm bytes        — Σ |operands| + |result| over non-fusion-internal ops
+                       (an upper-ish bound on HBM traffic used for the
+                       memory roofline term).
+
+It is a text-level model: exotic ops (sort, custom-call, rng) count zero
+flops. Dots dominate every workload here, so accuracy is within a few
+percent of a real profile for these graphs (validated against XLA's own
+numbers on loop-free modules in tests).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "remainder", "atan2",
+    "power",
+}
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "logistic", "sine",
+    "cosine", "expm1", "log-plus-one", "erf", "cbrt",
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(
+    r"(bf16|f64|f32|f16|f8e4m3|f8e5m2|s64|s32|s16|s8|s4|u64|u32|u16|u8|u4|"
+    r"pred|c64|c128|token|opaque)\[([0-9,]*)\]"
+)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_elems(text: str) -> tuple[int, int]:
+    """(elements, bytes) summed over all dtype[shape] tokens in `text`."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[m.group(1)]
+    return elems, nbytes
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_operand: dict = field(default_factory=lambda: dict.fromkeys(
+        _COLLECTIVES, 0.0))
+    coll_wire: dict = field(default_factory=lambda: dict.fromkeys(
+        _COLLECTIVES, 0.0))
+
+    def add(self, other: "Costs", mult: float = 1.0,
+            include_bytes: bool = True):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        if include_bytes:
+            self.hbm_bytes += other.hbm_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_operand[k] += other.coll_operand[k] * mult
+            self.coll_wire[k] += other.coll_wire[k] * mult
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "transcendentals": self.transcendentals,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_operand_bytes": dict(self.coll_operand),
+            "collective_wire_bytes": dict(self.coll_wire),
+            "collective_operand_total": sum(self.coll_operand.values()),
+            "collective_wire_total": sum(self.coll_wire.values()),
+        }
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.result_types: dict[str, dict[str, str]] = {}
+        self._parse(text)
+        self._memo: dict[str, Costs] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if not stripped or stripped.startswith("//"):
+                continue
+            # computation headers look like: %name (args) -> type {  /  ENTRY
+            if stripped.endswith("{") and "->" in stripped:
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    self.result_types[cur] = {}
+                    continue
+            if stripped == "}":
+                continue
+            if cur is None:
+                continue
+            self.computations[cur].append(stripped)
+            im = _INSTR_RE.match(stripped)
+            if im:
+                name, rhs = im.group(1), im.group(2)
+                tm = _SHAPE_RE.match(rhs) or re.match(r"^\(", rhs)
+                # record full result type text (up to the opcode)
+                self.result_types[cur][name] = rhs
+
+    # -- per-instruction helpers -------------------------------------------
+
+    def _operand_names(self, rhs: str) -> list[str]:
+        op = rhs.split("(", 1)
+        if len(op) < 2:
+            return []
+        args = op[1]
+        depth = 1
+        out = []
+        cur = []
+        for ch in args:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                out.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        out.append("".join(cur))
+        return [re.sub(r"^\s*%?", "", a.strip()).split(" ")[0] for a in out
+                if a.strip()]
+
+    def _type_of(self, comp: str, name: str) -> str:
+        rhs = self.result_types.get(comp, {}).get(name, "")
+        # result type is the prefix before the opcode word
+        return rhs
+
+    def _dot_flops(self, comp: str, rhs: str) -> float:
+        res_elems, _ = _shape_elems(rhs.split(" dot(", 1)[0])
+        ops = self._operand_names(rhs)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+        if not m or not ops:
+            return 2.0 * res_elems  # fallback
+        lhs_t = self._type_of(comp, ops[0])
+        sm = _SHAPE_RE.search(lhs_t)
+        if not sm:
+            return 2.0 * res_elems
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        k = 1
+        for ci in m.group(1).split(","):
+            if ci:
+                k *= dims[int(ci)]
+        return 2.0 * res_elems * k
+
+    def _group_size(self, rhs: str, kind: str) -> int:
+        m = _GROUPS_RE.search(rhs)
+        if m:
+            return max(int(m.group(2)), 1)
+        m = _GROUPS_BRACE_RE.search(rhs)
+        if m:
+            return max(len(m.group(1).split(",")), 1)
+        return 2
+
+    # -- computation-level costing ------------------------------------------
+
+    def _operand_bytes(self, comp: str, rhs: str) -> int:
+        total = 0
+        for name in self._operand_names(rhs):
+            _, b = _shape_elems(self._type_of(comp, name))
+            total += b
+        return total
+
+    def _fusion_operand_bytes(self, comp: str, rhs: str, called: str) -> int:
+        """Bytes actually read by a fusion's operands.
+
+        A loop fusion that dynamic-slices a big stacked operand (scan xs)
+        reads only the slice, not the stack — charging the full operand per
+        iteration inflates scanned models ~100×. For each fused parameter
+        whose ONLY users are dynamic-slice ops, charge the slice result
+        sizes; otherwise the full operand (XLA HloCostAnalysis semantics).
+        """
+        ops_names = self._operand_names(rhs)
+        lines = self.computations.get(called, [])
+        # map parameter index → local name and find users
+        param_name: dict[int, str] = {}
+        for ln in lines:
+            m = re.match(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*.*"
+                         r"\sparameter\((\d+)\)", ln)
+            if m:
+                param_name[int(m.group(2))] = m.group(1)
+        total = 0
+        for i, oname in enumerate(ops_names):
+            _, full = _shape_elems(self._type_of(comp, oname))
+            pname = param_name.get(i)
+            if pname is None:
+                total += full
+                continue
+            sliced = 0
+            ok = True
+            for ln in lines:
+                if f"%{pname}" not in ln:
+                    continue
+                im = _INSTR_RE.match(ln)
+                if im and im.group(1) == pname:
+                    continue  # the parameter definition itself
+                if f"%{pname})" in ln or f"%{pname}," in ln or \
+                        f"%{pname} " in ln:
+                    om = re.search(r"\s([a-z][\w\-]*)\(", ln)
+                    user_op = om.group(1) if om else "?"
+                    if user_op == "dynamic-slice":
+                        _, rb = _shape_elems(
+                            ln.split(" dynamic-slice(", 1)[0])
+                        sliced += rb
+                    else:
+                        ok = False
+                        break
+            total += sliced if (ok and sliced) else full
+        return total
+
+    # ops that move no data themselves (views / bookkeeping)
+    _FREE = {"parameter", "get-tuple-element", "tuple", "bitcast",
+             "constant", "after-all", "iota", "partition-id", "replica-id",
+             "rng-bit-generator", "opt-barrier", "optimization-barrier"}
+
+    def cost(self, comp_name: str) -> Costs:
+        """Cost of one computation.
+
+        HBM model: an executed top-level op reads its operands and writes
+        its result once. Fusion internals are NOT charged (that is what
+        fusion is for) — only the fusion's own operands+result. While
+        bodies are charged per trip (buffers are re-read every iteration).
+        """
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = Costs()
+        for line in self.computations.get(comp_name, []):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rhs = im.group(2)
+            om = re.search(r"\s([a-z][\w\-]*)\(", rhs)
+            if not om:
+                continue
+            op = om.group(1)
+            res_elems, res_bytes = _shape_elems(rhs.split(f" {op}(", 1)[0])
+            io_bytes = res_bytes + self._operand_bytes(comp_name, rhs)
+
+            if op == "dot":
+                total.flops += self._dot_flops(comp_name, rhs)
+                total.hbm_bytes += io_bytes
+            elif op == "fusion":
+                cm = re.search(r"calls=%([\w\.\-]+)", rhs)
+                if cm:
+                    # flops recurse; internal bytes do NOT hit HBM
+                    total.add(self.cost(cm.group(1)), include_bytes=False)
+                    total.hbm_bytes += res_bytes + self._fusion_operand_bytes(
+                        comp_name, rhs, cm.group(1))
+                else:
+                    total.hbm_bytes += io_bytes
+            elif op in ("call", "async-start", "custom-call"):
+                cm = re.search(r"(?:to_apply|calls|called_computations)="
+                               r"\{?%([\w\.\-]+)", rhs)
+                if cm:
+                    total.add(self.cost(cm.group(1)))
+            elif op == "while":
+                tm = _TRIP_RE.search(rhs)
+                trips = int(tm.group(1)) if tm else 1
+                bm = re.search(r"body=%([\w\.\-]+)", rhs)
+                cm = re.search(r"condition=%([\w\.\-]+)", rhs)
+                if bm:
+                    total.add(self.cost(bm.group(1)), trips)
+                if cm:
+                    total.add(self.cost(cm.group(1)), trips)
+            elif op == "conditional":
+                for cm in re.finditer(r"(?:true_computation|false_computation|"
+                                      r"branch_computations=\{)%([\w\.\-]+)",
+                                      rhs):
+                    total.add(self.cost(cm.group(1)))
+            elif op in _COLLECTIVES or op.rstrip("-start") in _COLLECTIVES:
+                kind = op[:-6] if op.endswith("-start") else op
+                if kind not in _COLLECTIVES:
+                    continue
+                g = self._group_size(rhs, kind)
+                if kind == "all-reduce":
+                    operand = res_bytes
+                    wire = 2.0 * res_bytes * (g - 1) / g
+                elif kind == "all-gather":
+                    operand = res_bytes / g
+                    wire = res_bytes * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    operand = res_bytes * g
+                    wire = res_bytes * (g - 1)
+                elif kind == "all-to-all":
+                    operand = res_bytes
+                    wire = res_bytes * (g - 1) / g
+                else:  # collective-permute
+                    operand = res_bytes
+                    wire = res_bytes
+                total.coll_operand[kind] += operand
+                total.coll_wire[kind] += wire
+                total.hbm_bytes += res_bytes
+            elif op in _TRANSCENDENTAL:
+                total.transcendentals += res_elems
+                total.flops += res_elems
+                total.hbm_bytes += io_bytes
+            elif op in _ELEMENTWISE:
+                total.flops += res_elems
+                total.hbm_bytes += io_bytes
+            elif op in ("reduce", "reduce-window"):
+                in_bytes = self._operand_bytes(comp_name, rhs)
+                in_elems = 0
+                for name in self._operand_names(rhs):
+                    e, _ = _shape_elems(self._type_of(comp_name, name))
+                    in_elems += e
+                total.flops += in_elems / 2  # args include init values
+                total.hbm_bytes += res_bytes + in_bytes
+            elif op == "convolution":
+                total.flops += 2.0 * res_elems  # window=1 convs only here
+                total.hbm_bytes += io_bytes
+            elif op == "dynamic-slice":
+                # reads only the slice (result), not the whole operand —
+                # charging the operand would bill a scanned layer stack in
+                # full on EVERY loop iteration (≈100× inflation)
+                total.hbm_bytes += 2 * res_bytes
+            elif op == "dynamic-update-slice":
+                # in-place: writes only the update region (operand 1)
+                ops_names = self._operand_names(rhs)
+                upd = 0
+                if len(ops_names) >= 2:
+                    _, upd = _shape_elems(self._type_of(comp_name,
+                                                        ops_names[1]))
+                total.hbm_bytes += 2 * (upd or res_bytes)
+            elif op in self._FREE:
+                pass
+            else:
+                # copies, transposes, etc: real movement
+                total.hbm_bytes += io_bytes
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> Costs:
+        # entry is the computation named like the module's ENTRY; find the
+        # one not called by anyone (fallback: max flops)
+        called: set[str] = set()
+        for lines in self.computations.values():
+            for line in lines:
+                for m in re.finditer(r"(?:calls|to_apply|body|condition|"
+                                     r"true_computation|false_computation)="
+                                     r"\{?%([\w\.\-]+)", line):
+                    called.add(m.group(1))
+        roots = [c for c in self.computations if c not in called]
+        total = Costs()
+        best = None
+        for r in roots:
+            c = self.cost(r)
+            if best is None or c.flops > best.flops:
+                best = c
+        if best is not None:
+            total.add(best)
+        return total
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloModule(hlo_text).entry_cost().as_dict()

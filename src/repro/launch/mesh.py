@@ -1,0 +1,24 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (pod composes with data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,158 @@
+"""Step factories + input specs for every (arch × shape) cell.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) — the dry-run and
+the real drivers share these.
+
+``make_train_step`` lowers loss→grad→AdamW; ``make_prefill_step`` /
+``make_decode_step`` lower the serving path (decode cells lower
+``serve_step`` — one new token against a seq_len KV cache — NOT train_step,
+per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import (
+    decode_step, forward, init_cache, init_model, loss_fn, unbox,
+)
+from repro.models.layers import axes_tree
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Model inputs for one shape cell (train batch or serve request)."""
+    B, S = cell.global_batch, cell.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if cell.kind == "train":
+        if cfg.frontend == "audio":
+            return {
+                "frames": _sds((B, S, cfg.frontend_dim), f32),
+                "labels": _sds((B, S), i32),
+            }
+        if cfg.frontend == "vision":
+            P = cfg.num_patches
+            return {
+                "patches": _sds((B, P, cfg.frontend_dim), f32),
+                "tokens": _sds((B, S - P), i32),
+                "labels": _sds((B, S - P), i32),
+            }
+        return {
+            "tokens": _sds((B, S), i32),
+            "labels": _sds((B, S), i32),
+        }
+    if cell.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {"frames": _sds((B, S, cfg.frontend_dim), f32)}
+        if cfg.frontend == "vision":
+            P = cfg.num_patches
+            return {
+                "patches": _sds((B, P, cfg.frontend_dim), f32),
+                "tokens": _sds((B, S - P), i32),
+            }
+        return {"tokens": _sds((B, S), i32)}
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _sds((B, 1), i32)}
+
+
+def concretize(specs: dict, key=None) -> dict:
+    """Materialize random arrays matching input_specs (smoke/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, 128).astype(s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# state shapes (eval_shape — no allocation)
+# ---------------------------------------------------------------------------
+
+def model_shapes(cfg: ModelConfig):
+    """(param value shapes, param logical-axes tree) via eval_shape."""
+    boxed = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+    return unbox(boxed), axes_tree(boxed)
+
+
+def train_state_shapes(cfg: ModelConfig):
+    params_sh, p_axes = model_shapes(cfg)
+    opt_sh = jax.eval_shape(adamw.init, params_sh)
+    # moments mirror parameter axes; step is scalar
+    opt_axes = adamw.AdamWState(step=(), m=p_axes, v=p_axes)
+    return TrainState(params_sh, opt_sh), TrainState(p_axes, opt_axes)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len),
+    )
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, cfg, batch)
+        params, opt, metrics = adamw.update(
+            grads, state.opt, state.params, opt_cfg
+        )
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Prompt → (last-position logits, filled caches)."""
+    def prefill_step(params, batch: dict, caches):
+        logits, caches = decode_step(
+            params, cfg, batch, caches, jnp.asarray(0, jnp.int32)
+        )
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, caches, index, tokens(B,1)) → (next tokens, caches, index+1)."""
+    def serve_step(params, caches, index, batch: dict):
+        logits, caches = decode_step(params, cfg, batch, caches, index)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches, index + 1
+
+    return serve_step
+
+
+def make_encoder_step(cfg: ModelConfig):
+    """Encoder-only 'prefill': full-sequence representation logits."""
+    def encode_step(params, batch: dict):
+        return forward(params, cfg, batch)
+
+    return encode_step

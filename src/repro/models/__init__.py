@@ -1,0 +1,14 @@
+from .model import (
+    cross_entropy_loss,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+)
+from .layers import Boxed, axes_tree, unbox
+
+__all__ = [
+    "cross_entropy_loss", "decode_step", "forward", "init_cache",
+    "init_model", "loss_fn", "Boxed", "axes_tree", "unbox",
+]

@@ -1,0 +1,324 @@
+"""Attention: GQA (qk-norm / qkv-bias options) and MLA, with KV caches.
+
+Prefill uses a memory-bounded *online-softmax chunked attention* (flash-
+attention schedule in pure JAX lax): queries are processed in blocks and the
+KV sequence is scanned with running (max, denominator) statistics, so the
+full S×S score matrix is never materialized — required for the 32k-prefill
+dry-run cells to fit HBM.
+
+Caches:
+  GQA: {"k": (B, S_max, Kv, D), "v": ..., } updated via dynamic slice.
+  MLA: {"c_kv": (B, S_max, kv_lora), "k_pe": (B, S_max, rope_dim)} — the
+       compressed cache that is MLA's reason to exist.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    Boxed, apply_rope, dense_init, init_rmsnorm, rmsnorm, zeros_init,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention core
+# ---------------------------------------------------------------------------
+
+def _attend_dense(q, k, v, mask, scale):
+    """Reference einsum attention. q:(B,Sq,K,G,D) k/v:(B,Sk,K,D)."""
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def chunked_attention(
+    q: jax.Array,        # (B, Sq, H, D)
+    k: jax.Array,        # (B, Sk, Kv, D)
+    v: jax.Array,        # (B, Sk, Kv, D)
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    kv_valid_len: jax.Array | None = None,  # mask cache tail
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention; never materializes (Sq, Sk) at once."""
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qr = q.reshape(B, Sq, Kv, G, D)
+
+    if Sq * Sk <= (q_chunk * kv_chunk):  # small: one dense block
+        q_pos = q_offset + jnp.arange(Sq)
+        k_pos = jnp.arange(Sk)
+        mask = jnp.ones((Sq, Sk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if kv_valid_len is not None:
+            mask &= k_pos[None, :] < kv_valid_len
+        out = _attend_dense(qr, k, v, mask[None, None, None], scale)
+        return out.reshape(B, Sq, H, Dv)
+
+    if kv_valid_len is None and not isinstance(q_offset, jax.Array) \
+            and q_offset == 0:
+        # training/encoder path: flash attention (custom VJP, O(S) memory)
+        from .flash import flash_attention
+        out = flash_attention(qr, k, v, causal, q_chunk, kv_chunk)
+        return out.reshape(B, Sq, H, Dv)
+
+    # pad to chunk multiples
+    def pad_seq(x, c):
+        s = x.shape[1]
+        r = s % c
+        if r:
+            x = jnp.pad(x, ((0, 0), (0, c - r)) + ((0, 0),) * (x.ndim - 2))
+        return x
+
+    qp = pad_seq(qr, q_chunk)
+    kp = pad_seq(k, kv_chunk)
+    vp = pad_seq(v, kv_chunk)
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    qp = qp.reshape(B, nq, q_chunk, Kv, G, D)
+    kp = kp.reshape(B, nk, kv_chunk, Kv, D)
+    vp = vp.reshape(B, nk, kv_chunk, Kv, Dv)
+    valid = kv_valid_len if kv_valid_len is not None else Sk
+
+    def q_block(qb, qi):
+        # qb: (B, q_chunk, Kv, G, D)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            acc, m, denom = carry
+            kb, vb, ki = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb) * scale
+            mask = (k_pos[None, :] < valid)
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            logits = logits.astype(jnp.float32)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            denom = denom * alpha + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb)
+            acc = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, Kv, G, q_chunk, Dv), vp.dtype)
+        m0 = jnp.full((B, Kv, G, q_chunk), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, Kv, G, q_chunk), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0),
+            (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(denom, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))  # (B,qc,Kv,G,D)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.moveaxis(qp, 1, 0), jnp.arange(nq)),
+    )  # (nq, B, qc, Kv, G, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg) -> dict:
+    d, H, Kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], (d, Kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], (d, Kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], (H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((H, hd), ("heads", "head_dim"))
+        p["bk"] = zeros_init((Kv, hd), ("kv_heads", "head_dim"))
+        p["bv"] = zeros_init((Kv, hd), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": Boxed(jnp.ones((hd,)), ("head_dim",))}
+        p["k_norm"] = {"scale": Boxed(jnp.ones((hd,)), ("head_dim",))}
+    return p
+
+
+def gqa_attention(
+    params: dict,
+    cfg,
+    x: jax.Array,                    # (B, S, d)
+    positions: jax.Array,            # (S,) absolute positions
+    *,
+    causal: bool = True,
+    cache: dict | None = None,
+    cache_index: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if getattr(cfg, "repeat_kv", False):
+            # replicate kv heads to H: head reshapes stay (H,1) which keeps
+            # the `model`-axis sharding intact (no (Kv,G) resharding gather)
+            G = q.shape[2] // k.shape[2]
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        out = chunked_attention(q, k, v, causal=causal)
+        new_cache = None
+    else:
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        # causal with q_offset handles both decode (S=1) and prefill (S>1)
+        out = chunked_attention(
+            q, ck, cv, causal=causal, q_offset=idx, kv_valid_len=idx + S,
+        )
+        new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — low-rank compressed KV
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    dv = cfg.v_head_dim
+    L = cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, H, dn + dr), ("embed", "heads", "head_dim")),
+        "w_dkv": dense_init(ks[1], (d, L), ("embed", "kv_lora")),
+        "kv_norm": init_rmsnorm(L),
+        "w_uk": dense_init(ks[2], (L, H, dn), ("kv_lora", "heads", "head_dim")),
+        "w_uv": dense_init(ks[3], (L, H, dv), ("kv_lora", "heads", "head_dim")),
+        "w_kpe": dense_init(ks[4], (d, dr), ("embed", "head_dim")),
+        "wo": dense_init(ks[5], (H, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_attention(
+    params: dict,
+    cfg,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cache: dict | None = None,
+    cache_index: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])   # (B,S,L)
+    k_pe = apply_rope(
+        (x @ params["w_kpe"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]                                               # (B,S,dr)
+
+    if cache is not None:
+        idx = cache_index
+        c_kv_full = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+        k_pe_full = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, idx, 0))
+        valid = idx + S
+        q_offset = idx
+        new_cache = {"c_kv": c_kv_full, "k_pe": k_pe_full}
+        causal_flag = causal
+        if getattr(cfg, "mla_absorb", True) and S <= 16:
+            # ABSORBED decode (hillclimb #1): reorder the factorized product
+            # so the compressed cache is never decompressed — the same
+            # multiplication-order insight as the paper's Theorem 1.
+            #   scores = (q_nope·W_uk)·c_kvᵀ + q_pe·k_peᵀ ;
+            #   out    = (probs·c_kv)·W_uv
+            # Cost per token: O(H·(L+dr)·T) vs O(H·(dn+dr)·T + T·L·H·dn)
+            # for decompress-then-attend.
+            q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, params["w_uk"])
+            scale = 1.0 / jnp.sqrt(dn + dr)
+            s_nope = jnp.einsum(
+                "bshl,btl->bhst", q_lat,
+                c_kv_full.astype(q_lat.dtype))
+            s_pe = jnp.einsum(
+                "bshr,btr->bhst", q_pe, k_pe_full.astype(q_pe.dtype))
+            logits = (s_nope + s_pe).astype(jnp.float32) * scale
+            t_pos = jnp.arange(c_kv_full.shape[1])
+            q_pos = idx + jnp.arange(S)
+            bias = jnp.where(
+                (t_pos[None, :] < valid) & (q_pos[:, None] >= t_pos[None, :]),
+                0.0, -1e30)
+            probs = jax.nn.softmax(logits + bias[None, None], axis=-1)
+            o_lat = jnp.einsum(
+                "bhst,btl->bshl", probs.astype(c_kv_full.dtype), c_kv_full)
+            out = jnp.einsum("bshl,lhv->bshv", o_lat.astype(jnp.float32),
+                             params["w_uv"].astype(jnp.float32))
+            y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype),
+                           params["wo"])
+            return y, new_cache
+    else:
+        c_kv_full, k_pe_full = c_kv, k_pe
+        valid = None
+        q_offset = 0
+        new_cache = None
+        causal_flag = causal
+
+    # absorb: decompress per use (training path); shapes stay (B,S,H,·)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv_full, params["w_uk"])
+    vfull = jnp.einsum("bsl,lhk->bshk", c_kv_full, params["w_uv"])
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(
+            k_pe_full[:, :, None, :], (*k_pe_full.shape[:2], H, dr))],
+        axis=-1,
+    )
+    q_cat = jnp.concatenate([q_nope, q_pe], axis=-1)
+    out = chunked_attention(
+        q_cat, k_full, vfull, causal=causal_flag,
+        q_offset=q_offset, kv_valid_len=valid,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }

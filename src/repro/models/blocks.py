@@ -1,0 +1,259 @@
+"""Block composition: per-layer specs, init, and apply (with caches).
+
+A layer spec is a string like ``"gqa+mlp"``, ``"mla+moe"``, ``"mamba2"``,
+``"mamba2+shared"``, ``"mlstm"``, ``"slstm"``. Contiguous runs of identical
+specs are stacked and executed with ``jax.lax.scan`` (compile-time win: a
+95-layer dense model lowers as ONE loop body), mixed runs fall back to
+unrolled singles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    Boxed, dense_init, init_mlp, init_tucker_linear, make_norm, mlp,
+    tucker_linear, _is_boxed,
+)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg) -> list[str]:
+    L = cfg.num_layers
+    specs = []
+    for i in range(L):
+        if cfg.mixer == "mamba2":
+            s = "mamba2"
+            if cfg.shared_attn_every and (i % cfg.shared_attn_every
+                                          == cfg.shared_attn_every - 1):
+                s += "+shared"
+        elif cfg.mixer == "xlstm":
+            if cfg.slstm_every and (i % cfg.slstm_every
+                                    == cfg.slstm_every - 1):
+                s = "slstm"
+            else:
+                s = "mlstm"
+        else:
+            mixer = "mla" if cfg.use_mla else "gqa"
+            if cfg.num_experts and i >= cfg.first_k_dense:
+                ffn = "moe"
+            elif cfg.tucker_rank:
+                ffn = "tucker_mlp"
+            else:
+                ffn = "mlp"
+            s = f"{mixer}+{ffn}"
+        specs.append(s)
+    return specs
+
+
+def group_specs(specs: list[str]) -> list[tuple[str, int]]:
+    """Run-length encode: [(spec, count), ...]."""
+    groups = []
+    for s in specs:
+        if groups and groups[-1][0] == s:
+            groups[-1] = (s, groups[-1][1] + 1)
+        else:
+            groups.append((s, 1))
+    return groups
+
+
+def _shared_cfg(cfg):
+    """Config shim for the zamba2 shared attention block (runs at 2·d)."""
+    return dataclasses.replace(
+        cfg, d_model=2 * cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=2 * cfg.d_model // cfg.num_heads,
+        qk_norm=False, qkv_bias=False, mixer="gqa",
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg, spec: str) -> dict:
+    init_norm, _ = make_norm(cfg.norm_type)
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    mixer = spec.split("+")[0]
+    if mixer == "gqa":
+        p["ln1"] = init_norm(cfg.d_model)
+        p["mixer"] = attn.init_gqa(ks[0], cfg)
+    elif mixer == "mla":
+        p["ln1"] = init_norm(cfg.d_model)
+        p["mixer"] = attn.init_mla(ks[0], cfg)
+    elif mixer == "mamba2":
+        p["ln1"] = init_norm(cfg.d_model)
+        p["mixer"] = ssm_mod.init_mamba2(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["ln1"] = init_norm(cfg.d_model)
+        p["mixer"] = ssm_mod.init_mlstm(ks[0], cfg)
+    elif mixer == "slstm":
+        p["ln1"] = init_norm(cfg.d_model)
+        p["mixer"] = ssm_mod.init_slstm(ks[0], cfg)
+
+    if "+moe" in spec:
+        p["ln2"] = init_norm(cfg.d_model)
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg)
+    elif "+tucker_mlp" in spec:
+        p["ln2"] = init_norm(cfg.d_model)
+        p["ffn"] = {
+            "up": init_tucker_linear(ks[1], cfg.d_model, cfg.d_ff,
+                                     cfg.tucker_rank),
+            "gate": init_tucker_linear(ks[2], cfg.d_model, cfg.d_ff,
+                                       cfg.tucker_rank),
+            "down": init_tucker_linear(ks[3], cfg.d_ff, cfg.d_model,
+                                       cfg.tucker_rank, in_axis="mlp",
+                                       out_axis="embed"),
+        }
+    elif "+mlp" in spec:
+        dff = cfg.dense_d_ff if (cfg.num_experts and cfg.dense_d_ff) else cfg.d_ff
+        p["ln2"] = init_norm(cfg.d_model)
+        p["ffn"] = init_mlp(ks[1], cfg.d_model, dff,
+                            gated=cfg.activation != "gelu")
+    if "+shared" in spec:
+        # per-invocation projector back to d (shared trunk lives model-level)
+        p["shared_proj"] = dense_init(
+            ks[2], (2 * cfg.d_model, cfg.d_model), ("mlp", "embed"),
+        )
+    return p
+
+
+def init_shared_block(key, cfg) -> dict:
+    """zamba2's weight-tied attention+MLP trunk at width 2·d_model."""
+    scfg = _shared_cfg(cfg)
+    init_norm, _ = make_norm(cfg.norm_type)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(scfg.d_model),
+        "attn": attn.init_gqa(ks[0], scfg),
+        "ln2": init_norm(scfg.d_model),
+        "mlp": init_mlp(ks[1], scfg.d_model, cfg.d_ff, gated=True),
+    }
+
+
+def apply_layer(
+    params: dict,
+    cfg,
+    spec: str,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: dict | None = None,
+    cache_index=None,
+    shared_params: dict | None = None,
+    embeds0: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    _, norm = make_norm(cfg.norm_type)
+    mixer = spec.split("+")[0]
+    new_cache: dict = {}
+    causal = not cfg.encoder_only
+
+    h = norm(params["ln1"], x, cfg.norm_eps)
+    if mixer in ("gqa", "mla"):
+        fn = attn.gqa_attention if mixer == "gqa" else attn.mla_attention
+        sub = cache.get("attn") if cache else None
+        y, nc = fn(params["mixer"], cfg, h, positions, causal=causal,
+                   cache=sub, cache_index=cache_index)
+        if nc is not None:
+            new_cache["attn"] = nc
+    elif mixer == "mamba2":
+        sub = cache.get("ssm") if cache else None
+        y, nc = ssm_mod.mamba2(params["mixer"], cfg, h, cache=sub)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    elif mixer == "mlstm":
+        sub = cache.get("ssm") if cache else None
+        y, nc = ssm_mod.mlstm(params["mixer"], cfg, h, cache=sub)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    elif mixer == "slstm":
+        sub = cache.get("ssm") if cache else None
+        y, nc = ssm_mod.slstm(params["mixer"], cfg, h, cache=sub)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    x = x + y.astype(x.dtype)
+
+    if "ffn" in params:
+        h = norm(params["ln2"], x, cfg.norm_eps)
+        if "+moe" in spec:
+            from repro.distributed import context as dist_ctx
+            mesh = dist_ctx.current_mesh()
+            if mesh is not None and getattr(cfg, "moe_sharded", False):
+                y = moe_mod.moe_ffn_sharded(params["ffn"], cfg, h, mesh)
+            else:
+                y = moe_mod.moe_ffn(params["ffn"], cfg, h)
+        elif "+tucker_mlp" in spec:
+            up = tucker_linear(params["ffn"]["up"], h)
+            gate = tucker_linear(params["ffn"]["gate"], h)
+            y = tucker_linear(
+                params["ffn"]["down"], jax.nn.silu(gate) * up
+            )
+        else:
+            y = mlp(params["ffn"], h, cfg.activation)
+        x = x + y.astype(x.dtype)
+
+    if "+shared" in spec:
+        scfg = _shared_cfg(cfg)
+        z = jnp.concatenate([x, embeds0], axis=-1)       # (B,S,2d)
+        h = norm(shared_params["ln1"], z, cfg.norm_eps)
+        sub = cache.get("shared_attn") if cache else None
+        y, nc = attn.gqa_attention(shared_params["attn"], scfg, h, positions,
+                                   causal=causal, cache=sub,
+                                   cache_index=cache_index)
+        if nc is not None:
+            new_cache["shared_attn"] = nc
+        z = z + y
+        h = norm(shared_params["ln2"], z, cfg.norm_eps)
+        z = z + mlp(shared_params["mlp"], h, cfg.activation).astype(z.dtype)
+        x = x + (z @ params["shared_proj"]).astype(x.dtype)
+
+    return x, (new_cache if new_cache else None)
+
+
+def init_layer_cache(cfg, spec: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> dict | None:
+    mixer = spec.split("+")[0]
+    c: dict = {}
+    if mixer == "gqa":
+        c["attn"] = attn.init_gqa_cache(cfg, batch, max_len, dtype)
+    elif mixer == "mla":
+        c["attn"] = attn.init_mla_cache(cfg, batch, max_len, dtype)
+    elif mixer == "mamba2":
+        c["ssm"] = ssm_mod.init_mamba2_cache(cfg, batch)
+    elif mixer == "mlstm":
+        c["ssm"] = ssm_mod.init_mlstm_cache(cfg, batch)
+    elif mixer == "slstm":
+        c["ssm"] = ssm_mod.init_slstm_cache(cfg, batch)
+    if "+shared" in spec:
+        c["shared_attn"] = attn.init_gqa_cache(
+            _shared_cfg(cfg), batch, max_len, dtype)
+    return c or None
+
+
+# ---------------------------------------------------------------------------
+# stacking helpers (scan over identical layers)
+# ---------------------------------------------------------------------------
+
+def stack_boxed(trees: list) -> Any:
+    """Stack a list of identically-structured Boxed trees; prepend 'layers'."""
+    return jax.tree.map(
+        lambda *ls: Boxed(
+            jnp.stack([l.value for l in ls]), ("layers", *ls[0].axes)
+        ),
+        *trees,
+        is_leaf=_is_boxed,
+    )
+
+
+def stack_values(trees: list) -> Any:
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)

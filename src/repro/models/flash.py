@@ -1,0 +1,188 @@
+"""Flash attention with a custom VJP (recompute backward, O(S) memory).
+
+Differentiating a naive online-softmax scan makes JAX save every chunk's
+probability block — O(S²) per layer, which is exactly what flash attention
+exists to avoid. This module implements the standard FA2 forward/backward:
+
+  forward : per q-chunk, scan kv-chunks with running (max m, denom l);
+            saves only (q, k, v, out, m, l) — O(S·D).
+  backward: recompute p-blocks chunkwise; dk/dv accumulate in a carry,
+            dq is emitted per q-chunk. Peak extra memory = one
+            (q_chunk × kv_chunk) block per step.
+
+Used for the no-cache (training/encoder) path; decode/prefill-with-cache
+paths don't differentiate, so the plain scan version there is fine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_seq(x, c):
+    r = x.shape[1] % c
+    if r:
+        x = jnp.pad(x, ((0, 0), (0, c - r)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+def _fwd_impl(q, k, v, causal, q_chunk, kv_chunk):
+    """Returns out (B,Sq,Kv,G,Dv), m, l (B,Kv,G,Sq) — padded lengths."""
+    B, Sq, Kv, G, D = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qp = q.reshape(B, nq, q_chunk, Kv, G, D)
+    kp = k.reshape(B, nk, kv_chunk, Kv, D)
+    vp = v.reshape(B, nk, kv_chunk, Kv, Dv)
+
+    def q_block(args):
+        qb, qi = args
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kb, vb, ki = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb) * scale
+            logits = logits.astype(jnp.float32)
+            if causal:
+                bias = jnp.minimum(
+                    (q_pos[:, None] - k_pos[None, :]).astype(jnp.float32),
+                    0.0) * 1e12                      # (qc,kc): 0 keep, -inf drop
+                logits = logits + bias[None, None, None]
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb)
+            acc = acc * alpha[..., None].astype(acc.dtype) + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, Kv, G, q_chunk, Dv), v.dtype)
+        m0 = jnp.full((B, Kv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)), m, l  # (B,qc,Kv,G,Dv)
+
+    outs, ms, ls = jax.lax.map(q_block, (jnp.moveaxis(qp, 1, 0),
+                                         jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Kv, G, Dv)
+    m = jnp.concatenate(jnp.moveaxis(ms, 0, -1)[None], 0)  # (1,B,Kv,G,qc,nq)?
+    # simpler: ms (nq,B,Kv,G,qc) → (B,Kv,G,Sq)
+    m = jnp.moveaxis(ms, 0, 3).reshape(B, Kv, G, Sq)
+    l = jnp.moveaxis(ls, 0, 3).reshape(B, Kv, G, Sq)
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
+    """q: (B,Sq,Kv,G,D); k/v: (B,Sk,Kv,D[v]) → (B,Sq,Kv,G,Dv)."""
+    return _flash_fwd(q, k, v, causal, q_chunk, kv_chunk)[0]
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    qp = _pad_seq(q, q_chunk)
+    kp = _pad_seq(k, kv_chunk)
+    vp = _pad_seq(v, kv_chunk)
+    out, m, l = _fwd_impl(qp, kp, vp, causal, q_chunk, kv_chunk)
+    return out[:, :Sq], (qp, kp, vp, out, m, l, Sq, Sk)
+
+
+def _flash_bwd(causal, q_chunk, kv_chunk, res, dout):
+    qp, kp, vp, out, m, l, Sq, Sk = res
+    B, Sqp, Kv, G, D = qp.shape
+    Skp = kp.shape[1]
+    Dv = vp.shape[-1]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    nq, nk = Sqp // q_chunk, Skp // kv_chunk
+    doutp = _pad_seq(dout, q_chunk)
+
+    # D_i = Σ_d dout·out  (B,Kv,G,Sq)
+    Dsum = jnp.einsum(
+        "bqkgd,bqkgd->bkgq", doutp.astype(jnp.float32),
+        out.astype(jnp.float32),
+    )
+
+    qc = qp.reshape(B, nq, q_chunk, Kv, G, D)
+    dc = doutp.reshape(B, nq, q_chunk, Kv, G, Dv)
+    mc = m.reshape(B, Kv, G, nq, q_chunk)
+    lc = l.reshape(B, Kv, G, nq, q_chunk)
+    Dc = Dsum.reshape(B, Kv, G, nq, q_chunk)
+    kc = kp.reshape(B, nk, kv_chunk, Kv, D)
+    vc = vp.reshape(B, nk, kv_chunk, Kv, Dv)
+
+    def q_step(carry, inp):
+        dk_acc, dv_acc = carry
+        qb, db, mb, lb, Db, qi = inp
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        vc_f = lambda vb: vb.astype(jnp.float32)
+
+        def kv_step(dq_part, inp2):
+            kb, vb, ki = inp2
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb) * scale
+            logits = logits.astype(jnp.float32)
+            if causal:
+                bias = jnp.minimum(
+                    (q_pos[:, None] - k_pos[None, :]).astype(jnp.float32),
+                    0.0) * 1e12
+                logits = logits + bias[None, None, None]
+            p = jnp.exp(logits - mb[..., None]) \
+                / jnp.maximum(lb, 1e-30)[..., None]          # (B,Kv,G,qc,kc)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs",
+                            db.astype(jnp.float32), vc_f(vb))
+            ds = p * (dp - Db[..., None]) * scale
+            dq_part = dq_part + jnp.einsum(
+                "bkgqs,bskd->bqkgd", ds, kb.astype(jnp.float32))
+            dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                                qb.astype(jnp.float32))
+            dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p,
+                                db.astype(jnp.float32))
+            return dq_part, (dk_blk, dv_blk, ki)
+
+        dq0 = jnp.zeros((B, q_chunk, Kv, G, D), jnp.float32)
+        dq_b, (dk_blks, dv_blks, kis) = jax.lax.scan(
+            kv_step, dq0,
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nk)),
+        )
+        dk_acc = dk_acc + jnp.moveaxis(dk_blks, 0, 1).reshape(
+            B, Skp, Kv, D)
+        dv_acc = dv_acc + jnp.moveaxis(dv_blks, 0, 1).reshape(
+            B, Skp, Kv, Dv)
+        return (dk_acc, dv_acc), dq_b
+
+    dk0 = jnp.zeros((B, Skp, Kv, D), jnp.float32)
+    dv0 = jnp.zeros((B, Skp, Kv, Dv), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(dc, 1, 0),
+         jnp.moveaxis(mc, 3, 0), jnp.moveaxis(lc, 3, 0),
+         jnp.moveaxis(Dc, 3, 0), jnp.arange(nq)),
+    )
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sqp, Kv, G, D)
+    return (
+        dq[:, :Sq].astype(qp.dtype),
+        dk[:, :Sk].astype(kp.dtype),
+        dv[:, :Sk].astype(vp.dtype),
+    )
+
+
+def _flash_fwd_rule(q, k, v, causal, q_chunk, kv_chunk):
+    out, res = _flash_fwd(q, k, v, causal, q_chunk, kv_chunk)
+    return out, res
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd)

@@ -1,0 +1,212 @@
+"""Top-level model: embeddings/frontends → grouped blocks → head.
+
+``init_model`` returns a Boxed tree; ``forward``/``decode_step`` consume the
+*unboxed* value tree (sharding metadata is split off by the launcher).
+
+Layer groups: contiguous identical specs are stacked and run under
+``jax.lax.scan`` (one compiled body per distinct spec), singles unrolled.
+``cfg.remat == "block"`` wraps each block body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (
+    apply_layer, group_specs, init_layer, init_layer_cache,
+    init_shared_block, layer_specs, stack_boxed, stack_values,
+)
+from .layers import Boxed, dense_init, embed, init_embedding, make_norm, unbox
+from repro.distributed import context as dist_ctx
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg):
+    specs = layer_specs(cfg)
+    groups = group_specs(specs)
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    init_norm, _ = make_norm(cfg.norm_type)
+
+    params: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        params["frontend"] = {
+            "proj": dense_init(keys[-1], (cfg.frontend_dim, cfg.d_model),
+                               (None, "embed")),
+        }
+    else:
+        params["embed"] = init_embedding(keys[-1], cfg.vocab_size, cfg.d_model)
+        if cfg.frontend == "vision":
+            params["frontend"] = {
+                "proj": dense_init(keys[-2], (cfg.frontend_dim, cfg.d_model),
+                                   (None, "embed")),
+            }
+
+    layer_groups = []
+    li = 0
+    for spec, count in groups:
+        sub = [init_layer(keys[li + j], cfg, spec) for j in range(count)]
+        li += count
+        layer_groups.append(stack_boxed(sub) if count > 1 else sub[0])
+    params["groups"] = layer_groups
+
+    if cfg.shared_attn_every:
+        params["shared_block"] = init_shared_block(keys[-3], cfg)
+
+    params["ln_f"] = init_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[-4], (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# input embedding / frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg, batch: dict) -> jax.Array:
+    """batch → (B, S, d) activations (stub frontends per assignment)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.frontend == "audio":
+        x = batch["frames"] @ params["frontend"]["proj"]
+    elif cfg.frontend == "vision" and "patches" in batch:
+        patches = batch["patches"] @ params["frontend"]["proj"]
+        toks = embed(params["embed"], batch["tokens"])
+        x = jnp.concatenate([patches.astype(toks.dtype), toks], axis=1)
+    else:  # text-only (incl. VLM decode: patches already in the cache)
+        x = embed(params["embed"], batch["tokens"])
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward (no cache) / decode (with cache)
+# ---------------------------------------------------------------------------
+
+def _run_groups(params, cfg, x, positions, *, caches=None, cache_index=None,
+                embeds0=None):
+    """Apply all layer groups; returns (x, new_caches or None)."""
+    specs = [s for s, _ in group_specs(layer_specs(cfg))]
+    counts = [c for _, c in group_specs(layer_specs(cfg))]
+    shared = params.get("shared_block")
+    new_caches = [] if caches is not None else None
+
+    for gi, (spec, count) in enumerate(zip(specs, counts)):
+        gp = params["groups"][gi]
+        gcache = caches[gi] if caches is not None else None
+
+        def body(x, layer_params, layer_cache):
+            # barrier: keeps the saved bf16 carry from being convert-hoisted
+            # into a second f32 stack by XLA's loop-invariant code motion
+            x = jax.lax.optimization_barrier(x)
+            return apply_layer(
+                layer_params, cfg, spec, x,
+                positions=positions, cache=layer_cache,
+                cache_index=cache_index, shared_params=shared,
+                embeds0=embeds0,
+            )
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+
+        if count == 1:
+            x, nc = body(x, gp, gcache)
+            x = dist_ctx.constrain(x)
+        else:
+            def scan_fn(x, xs):
+                lp, lc = xs
+                x, nc = body(x, lp, lc)
+                return dist_ctx.constrain(x), nc
+
+            x, nc = jax.lax.scan(scan_fn, x, (gp, gcache))
+        if new_caches is not None:
+            new_caches.append(nc)
+    return x, new_caches
+
+
+def _cast_params(params, cfg):
+    """Mixed precision: f32 master params, bf16 compute copies.
+
+    The convert sits on the sharded leaf, so FSDP all-gathers move bf16 —
+    halving weight-gather bytes AND putting matmuls on the bf16 MXU path.
+    """
+    if not (cfg.mixed_precision and cfg.dtype == "bfloat16"):
+        return params
+    return jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if isinstance(x, jax.Array) and x.dtype == jnp.float32 else x,
+        params,
+    )
+
+
+def forward(params, cfg, batch: dict) -> jax.Array:
+    """Training/prefill forward → logits (B, S, vocab)."""
+    params = _cast_params(params, cfg)
+    x = embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    embeds0 = x if cfg.shared_attn_every else None
+    x, _ = _run_groups(params, cfg, x, positions, embeds0=embeds0)
+    _, norm = make_norm(cfg.norm_type)
+    x = norm(params["ln_f"], x, cfg.norm_eps)
+    head = (params["embed"]["embedding"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return dist_ctx.constrain_logits(x @ head.astype(x.dtype))
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-group caches, stacked along the scan axis for scanned groups."""
+    caches = []
+    for spec, count in group_specs(layer_specs(cfg)):
+        one = lambda: init_layer_cache(cfg, spec, batch, max_len, dtype)
+        if count == 1:
+            caches.append(one())
+        else:
+            caches.append(stack_values([one() for _ in range(count)]))
+    return caches
+
+
+def decode_step(params, cfg, batch: dict, caches, cache_index):
+    """One decode step. batch["tokens"]: (B, 1) → (logits (B,1,V), caches)."""
+    params = _cast_params(params, cfg)
+    x = embed_inputs(params, cfg, batch)
+    positions = cache_index + jnp.arange(x.shape[1])
+    embeds0 = x if cfg.shared_attn_every else None
+    x, new_caches = _run_groups(
+        params, cfg, x, positions, caches=caches, cache_index=cache_index,
+        embeds0=embeds0,
+    )
+    _, norm = make_norm(cfg.norm_type)
+    x = norm(params["ln_f"], x, cfg.norm_eps)
+    head = (params["embed"]["embedding"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return x @ head.astype(x.dtype), new_caches
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_index: int = -100) -> jax.Array:
+    """Mean CE over non-ignored positions; stable log-softmax in f32."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore_index
+    labels_safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def loss_fn(params, cfg, batch: dict) -> jax.Array:
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":  # labels cover text positions only
+        logits = logits[:, -labels.shape[1]:]
+    return cross_entropy_loss(logits, labels)

@@ -1,0 +1,500 @@
+"""State-space & recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+Mamba2 uses the chunked SSD algorithm (intra-chunk quadratic + inter-chunk
+state scan) — linear in sequence length, the reason zamba2/xlstm run the
+``long_500k`` cell. Decode is the O(1)-per-token recurrent form with a
+carried (H, N, P) state + a (K-1)-deep conv cache.
+
+mLSTM trains with the stabilized parallel (quadratic-in-chunk) form and
+decodes with the matrix-memory recurrence; sLSTM is inherently sequential
+(scan over time) per the xLSTM paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, ones_init, rmsnorm, zeros_init, Boxed
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg) -> dict:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state_size
+    G = cfg.ssm_groups
+    conv_dim = d_inner + 2 * G * N
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj → [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+        "w_in": dense_init(
+            ks[0], (d, 2 * d_inner + 2 * G * N + H), ("embed", "mlp")
+        ),
+        "conv_w": dense_init(
+            ks[1], (cfg.ssm_conv, conv_dim), (None, "mlp"), scale=0.5
+        ),
+        "conv_b": zeros_init((conv_dim,), ("mlp",)),
+        "a_log": Boxed(jnp.zeros((H,)) + jnp.log(jnp.arange(1, H + 1.0)),
+                       ("heads",)),
+        "dt_bias": zeros_init((H,), ("heads",)),
+        "d_skip": ones_init((H,), ("heads",)),
+        "norm": {"scale": ones_init((d_inner,), ("mlp",))},
+        "w_out": dense_init(ks[2], (d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, window K. x:(B,S,C) w:(K,C).
+
+    Returns (y, new_state) where state is the last K-1 inputs."""
+    K = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xin = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(
+        xin[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xin[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(y + b), new_state
+
+
+def _ssd_chunked(x, dt, a_log, B_in, C_in, chunk: int, h0=None):
+    """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) B_in/C_in:(B,S,G,N) → y:(B,S,H,P).
+
+    h_t = exp(dt·A)·h_{t-1} + dt·B_t ⊗ x_t ;  y_t = C_t·h_t
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_in.shape[2], B_in.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = B_in.reshape(Bb, nc, chunk, G, N)
+    Cc = C_in.reshape(Bb, nc, chunk, G, N)
+
+    A = -jnp.exp(a_log)                                  # (H,) negative
+    la = dtc * A[None, None, None, :]                    # log decay per step
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,L,H)
+    total = cum[:, :, -1, :]                             # (B,nc,H)
+
+    # intra-chunk: scores[t,s] = C_t·B_s exp(cum_t − cum_s) dt_s  (s ≤ t)
+    cb = jnp.einsum("bcthn,bcshn->bchts",
+                    Cc.repeat(rep, axis=3).reshape(Bb, nc, chunk, H, N),
+                    Bc.repeat(rep, axis=3).reshape(Bb, nc, chunk, H, N))
+    cumh = cum.transpose(0, 1, 3, 2)                     # (B,nc,H,L)
+    logdecay = cumh[..., :, None] - cumh[..., None, :]   # (B,nc,H,t,s)
+    # mask in LOG space: for s>t the exponent is large-positive and exp()
+    # overflows to inf before a post-hoc where() — which NaNs the backward
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    logdecay = jnp.where(tri[None, None, None], logdecay, -jnp.inf)
+    w = cb * jnp.exp(logdecay)
+    w = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # × dt_s
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", w, xc)
+
+    # chunk states: S_c = Σ_s exp(total − cum_s) dt_s B_s ⊗ x_s  (B,nc,H,N,P)
+    sdecay = jnp.exp(total[:, :, None, :] - cum) * dtc   # (B,nc,L,H)
+    Bh = Bc.repeat(rep, axis=3).reshape(Bb, nc, chunk, H, N)
+    states = jnp.einsum("bcsh,bcshn,bcshp->bchnp", sdecay, Bh, xc)
+
+    # inter-chunk scan of h across chunks
+    def scan_fn(h, inp):
+        st, tot = inp                                    # (B,H,N,P), (B,H)
+        h_out = h                                        # state BEFORE chunk
+        h = h * jnp.exp(tot)[:, :, None, None] + st
+        return h, h_out
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, N, P), x.dtype)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )                                                    # (nc,B,H,N,P)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                  # (B,nc,H,N,P)
+
+    Ch = Cc.repeat(rep, axis=3).reshape(Bb, nc, chunk, H, N)
+    y_inter = jnp.einsum(
+        "bcthn,bchnp,bcth->bcthp", Ch, h_prev, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(Bb, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba2(
+    params: dict,
+    cfg,
+    x: jax.Array,                     # (B, S, d)
+    *,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state_size
+
+    zxbcdt = x @ params["w_in"]
+    z, xs, Bv, Cv, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + G * N, 2 * d_inner + 2 * G * N],
+        axis=-1,
+    )
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state
+    )
+    xs, Bv, Cv = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bv = Bv.reshape(B, S, G, N)
+    Cv = Cv.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + params["dt_bias"])         # (B,S,H)
+
+    if cache is None:
+        y, _ = _ssd_chunked(xs, dt, params["a_log"], Bv, Cv, cfg.ssm_chunk)
+        new_cache = None
+    elif S > 1:
+        # prefill into the cache: chunked SSD from the carried state
+        y, h = _ssd_chunked(xs, dt, params["a_log"], Bv, Cv, cfg.ssm_chunk,
+                            h0=cache["ssm"].astype(xs.dtype))
+        new_cache = {"conv": new_conv, "ssm": h}
+    else:
+        # recurrent decode (S small, typically 1): step the state
+        A = -jnp.exp(params["a_log"])
+        h = cache["ssm"]                                 # (B,H,N,P)
+
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp                    # (B,H,P),(B,H),(B,G,N)×2
+            decay = jnp.exp(dt_t * A)[:, :, None, None]
+            Bh = B_t.repeat(H // G, axis=1)              # (B,H,N)
+            Ch = C_t.repeat(H // G, axis=1)
+            h = h * decay + jnp.einsum(
+                "bh,bhn,bhp->bhnp", dt_t, Bh, x_t)
+            y_t = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+            return h, y_t
+
+        h, ys = jax.lax.scan(
+            step, h,
+            (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(dt, 1, 0),
+             jnp.moveaxis(Bv, 1, 0), jnp.moveaxis(Cv, 1, 0)),
+        )
+        y = jnp.moveaxis(ys, 0, 1)                       # (B,S,H,P)
+        new_cache = {"conv": new_conv, "ssm": h}
+
+    y = y + xs * params["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    return y @ params["w_out"], new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state_size
+    conv_dim = d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, N, cfg.ssm_head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = cfg.mlstm_inner // H
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * cfg.mlstm_inner), ("embed", "mlp")),
+        "conv_w": dense_init(ks[1], (cfg.xlstm_conv, cfg.mlstm_inner),
+                             (None, "mlp"), scale=0.5),
+        "conv_b": zeros_init((cfg.mlstm_inner,), ("mlp",)),
+        "wq": dense_init(ks[2], (cfg.mlstm_inner, H, dh),
+                         ("mlp", "heads", "head_dim")),
+        "wk": dense_init(ks[3], (cfg.mlstm_inner, H, dh),
+                         ("mlp", "heads", "head_dim")),
+        "wv": dense_init(ks[4], (cfg.mlstm_inner, H, dh),
+                         ("mlp", "heads", "head_dim")),
+        "w_if": dense_init(ks[5], (cfg.mlstm_inner, 2 * H), ("mlp", None),
+                           scale=0.02),
+        "if_bias": Boxed(
+            jnp.concatenate([jnp.zeros((H,)), 3.0 + jnp.arange(H) * 0.5]),
+            (None,),
+        ),
+        "norm": {"scale": ones_init((cfg.mlstm_inner,), ("mlp",))},
+        "w_down": dense_init(ks[6], (cfg.mlstm_inner, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilized parallel mLSTM. q,k,v:(B,S,H,D); gates:(B,S,H) pre-act."""
+    B, S, H, D = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))   # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)
+    # log weight[t,s] = F_t − F_s + i_s   (s ≤ t)
+    lw = (F[:, :, None, :] - F[:, None, :, :]
+          + i_gate.astype(jnp.float32)[:, None, :, :])      # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    lw = jnp.where(tri, lw, -jnp.inf)
+    m = jnp.max(lw, axis=2, keepdims=True)                  # (B,t,1,H)
+    wmat = jnp.exp(lw - m)                                   # (B,t,s,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) / jnp.sqrt(D)
+    weighted = wmat * scores.astype(jnp.float32)
+    denom = jnp.maximum(
+        jnp.abs(jnp.sum(weighted, axis=2)), jnp.exp(-m[:, :, 0, :])
+    )                                                        # (B,t,H)
+    y = jnp.einsum("btsh,bshd->bthd", weighted.astype(v.dtype), v)
+    return y / denom[..., None].astype(v.dtype)
+
+
+def _mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int = 256,
+                   init_state=None):
+    """Chunked mLSTM (TFLA-style): intra-chunk parallel + carried matrix
+    memory between chunks. O(S·chunk) instead of O(S²) — the quadratic
+    parallel form at S=4096 materializes B·S²·H (≈4 TB for the xlstm-125m
+    train cell); chunking cuts that by S/chunk = 16×.
+
+    Same stabilized semantics as (_mlstm_parallel, recurrent step):
+      m_t = max(max_{s≤t in chunk} (F_t−F_s+i_s), F_t + m_prev)
+      y_t = [Σ_s e^{lw−m_t}(q_t·k_s)v_s + e^{F_t+m_prev−m_t}(q_t·C_prev)]
+            / max(|Σ_s e^{lw−m_t}(q_t·k_s) + e^{F_t+m_prev−m_t}(q_t·n_prev)|,
+                  e^{−m_t})
+    """
+    B, S, H, D = q.shape
+    pad = (-S) % chunk
+    if pad:
+        pz = lambda x, c=0.0: jnp.pad(
+            x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+            constant_values=c)
+        q, k, v = pz(q), pz(k), pz(v)
+        # pad gates so padded steps neither decay (f≈+∞ ⇒ logσ≈0) nor
+        # contribute (i=−∞) — keeps the carried state and stabilizer exact
+        i_gate = pz(i_gate, -1e9)
+        f_gate = pz(f_gate, 30.0)
+    Sp = S + pad
+    nc = Sp // chunk
+    qc = q.reshape(B, nc, chunk, H, D)
+    kc = k.reshape(B, nc, chunk, H, D)
+    vc = v.reshape(B, nc, chunk, H, D)
+    ic = i_gate.reshape(B, nc, chunk, H).astype(jnp.float32)
+    fc = jax.nn.log_sigmoid(
+        f_gate.reshape(B, nc, chunk, H).astype(jnp.float32))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        C, n, m_prev = carry                       # (B,H,D,D),(B,H,D),(B,H)
+        qb, kb, vb, ib, fb = inp                   # (B,L,H,·)
+        F = jnp.cumsum(fb, axis=1)                 # (B,L,H)
+        lw = F[:, :, None, :] - F[:, None, :, :] + ib[:, None, :, :]
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)
+        lc = F + m_prev[:, None, :]                # carried-state log weight
+        m = jnp.maximum(jnp.max(lw, axis=2), lc)   # (B,L,H)
+        wmat = jnp.exp(lw - m[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) / jnp.sqrt(D)
+        weighted = wmat * scores.astype(jnp.float32)
+        wc = jnp.exp(lc - m)                       # (B,L,H)
+        num = (jnp.einsum("btsh,bshd->bthd", weighted.astype(vb.dtype), vb)
+               + wc[..., None].astype(vb.dtype)
+               * jnp.einsum("bthd,bhdv->bthv", qb / jnp.sqrt(D),
+                            C.astype(qb.dtype)))
+        den = jnp.maximum(
+            jnp.abs(jnp.sum(weighted, axis=2)
+                    + wc * jnp.einsum("bthd,bhd->bth",
+                                      qb.astype(jnp.float32),
+                                      n) / jnp.sqrt(D)),
+            jnp.exp(-m),
+        )
+        y = num / den[..., None].astype(num.dtype)
+
+        # advance the state to the chunk end
+        F_L = F[:, -1]                             # (B,H)
+        m_new = jnp.maximum(F_L + m_prev,
+                            jnp.max(F_L[:, None] - F + ib, axis=1))
+        w_seq = jnp.exp(F_L[:, None] - F + ib - m_new[:, None])  # (B,L,H)
+        carry_w = jnp.exp(F_L + m_prev - m_new)
+        C = (carry_w[..., None, None] * C
+             + jnp.einsum("blh,blhd,blhv->bhdv", w_seq,
+                          kb.astype(jnp.float32), vb.astype(jnp.float32)))
+        n = (carry_w[..., None] * n
+             + jnp.einsum("blh,blhd->bhd", w_seq, kb.astype(jnp.float32)))
+        return (C, n, m_new), y
+
+    if init_state is None:
+        init_state = (
+            jnp.zeros((B, H, D, D), jnp.float32),
+            jnp.zeros((B, H, D), jnp.float32),
+            jnp.zeros((B, H), jnp.float32),
+        )
+    final, ys = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(ic, 1, 0),
+         jnp.moveaxis(fc, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, D)
+    return y[:, :S], final
+
+
+def mlstm(params, cfg, x, *, cache=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    inner = cfg.mlstm_inner
+    dh = inner // H
+    up = x @ params["w_up"]
+    xb, zb = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xb, params["conv_w"], params["conv_b"],
+                                conv_state)
+    q = jnp.einsum("bsd,dhk->bshk", xc, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xc, params["wk"])
+    v = xb.reshape(B, S, H, dh)
+    gates = xc @ params["w_if"] + params["if_bias"]
+    i_gate, f_gate = gates[..., :H], gates[..., H:]
+
+    if cache is None:
+        Lc = getattr(cfg, "mlstm_chunk", 256)
+        if S > Lc:
+            y, _ = _mlstm_chunked(q, k, v, i_gate, f_gate, Lc)
+        else:
+            y = _mlstm_parallel(q, k, v, i_gate, f_gate)
+        new_cache = None
+    elif S > 1:
+        # prefill: chunked form, carrying the cache state in and out
+        Lc = getattr(cfg, "mlstm_chunk", 256)
+        y, (C, n, m) = _mlstm_chunked(
+            q, k, v, i_gate, f_gate, Lc,
+            init_state=(cache["C"], cache["n"], cache["m"]))
+        new_cache = {"conv": new_conv, "C": C, "n": n, "m": m}
+    else:
+        C, n, m = cache["C"], cache["n"], cache["m"]
+
+        def step(carry, inp):
+            C, n, m = carry
+            q_t, k_t, v_t, i_t, f_t = inp
+            logf = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+            m_new = jnp.maximum(logf + m, i_t.astype(jnp.float32))
+            fs = jnp.exp(logf + m - m_new)[..., None, None]
+            is_ = jnp.exp(i_t.astype(jnp.float32) - m_new)[..., None, None]
+            C = fs * C + is_ * jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+            n = fs[..., 0] * n + is_[..., 0] * k_t
+            qs = q_t / jnp.sqrt(dh)
+            num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
+                jnp.exp(-m_new),
+            )
+            return (C, n, m_new), num / den[..., None]
+
+        (C, n, m), ys = jax.lax.scan(
+            step, (C, n, m),
+            (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+             jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_gate, 1, 0),
+             jnp.moveaxis(f_gate, 1, 0)),
+        )
+        y = jnp.moveaxis(ys, 0, 1)
+        new_cache = {"conv": new_conv, "C": C, "n": n, "m": m}
+
+    y = y.reshape(B, S, inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(zb)
+    return y @ params["w_down"], new_cache
+
+
+def init_mlstm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    H = cfg.num_heads
+    dh = cfg.mlstm_inner // H
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm_conv - 1, cfg.mlstm_inner), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (sequential scan; block-diagonal recurrence per head)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "w_x": dense_init(ks[0], (d, 4 * d), ("embed", "mlp")),
+        "r_h": dense_init(ks[1], (H, P, 4 * P), ("heads", "head_dim", None),
+                          scale=0.02),
+        "bias": zeros_init((4 * d,), ("mlp",)),
+        "norm": {"scale": ones_init((d,), ("embed",))},
+        "w_up": dense_init(ks[2], (d, int(d * 4 / 3) * 2), ("embed", "mlp")),
+        "w_down": dense_init(ks[3], (int(d * 4 / 3), d), ("mlp", "embed")),
+    }
+
+
+def slstm(params, cfg, x, *, cache=None):
+    """x: (B,S,d). States per head: c,n,h,m (B,H,P)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    P = d // H
+    gx = x @ params["w_x"] + params["bias"]               # (B,S,4d)
+    gx = gx.reshape(B, S, 4, H, P)
+
+    if cache is None:
+        c0 = jnp.zeros((B, H, P), jnp.float32)
+        state = (c0, c0, c0, c0)  # c, n, h, m
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+
+    r_h = params["r_h"]                                    # (H,P,4P)
+
+    def step(carry, g_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h, r_h).reshape(B, H, 4, P)
+        z_in = g_t[:, 0] + rec[:, :, 0]
+        i_in = g_t[:, 1] + rec[:, :, 1]
+        f_in = g_t[:, 2] + rec[:, :, 2]
+        o_in = g_t[:, 3] + rec[:, :, 3]
+        z = jnp.tanh(z_in.astype(jnp.float32))
+        logf = jax.nn.log_sigmoid(f_in.astype(jnp.float32))
+        m_new = jnp.maximum(logf + m, i_in.astype(jnp.float32))
+        i_s = jnp.exp(i_in.astype(jnp.float32) - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * z
+        n = f_s * n + i_s
+        h_new = jax.nn.sigmoid(o_in.astype(jnp.float32)) * c / jnp.maximum(
+            n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    gts = jnp.moveaxis(gx, 1, 0).transpose(0, 1, 2, 3, 4)  # (S,B,4,H,P)
+    (c, n, h, m), hs = jax.lax.scan(step, state, gts)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    up = y @ params["w_up"]
+    a, b = jnp.split(up, 2, -1)
+    y = (jax.nn.gelu(a) * b) @ params["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    return y, new_cache
+
+
+def init_slstm_cache(cfg, batch: int) -> dict:
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

@@ -1,0 +1,34 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Used around the data-parallel reduction of the dense STD factor gradients
+(they are (I_n, J) dense after segment reduction — exactly the shape DP
+all-reduces move). Error feedback keeps the quantization residual locally
+and re-adds it next step, which preserves SGD convergence (Karimireddy et
+al., 2019).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_ef(grad: jax.Array, error: jax.Array):
+    """(grad + carried error) → (int8 q, per-row scale, new error)."""
+    g = grad + error
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(grad.dtype) * scale
+    new_error = g - deq
+    return q, scale, new_error
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(scale.dtype) * scale
+
+
+def compression_ratio(shape, dtype_bytes: int = 4) -> float:
+    """int8 payload + per-row fp32 scale vs raw."""
+    rows, cols = shape[-2], shape[-1]
+    raw = rows * cols * dtype_bytes
+    comp = rows * cols * 1 + rows * 4
+    return raw / comp

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests see the real single CPU device (the dry-run alone forces 512);
+# keep any accidental inherited flag from leaking in
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

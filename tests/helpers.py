@@ -1,0 +1,25 @@
+"""Shared test utilities."""
+import subprocess
+import sys
+import os
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_with_devices(code: str, num_devices: int = 4, timeout: int = 900):
+    """Run a python snippet in a subprocess with fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={num_devices}"
+    )
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    )
+    return proc.stdout

@@ -1,0 +1,81 @@
+"""Supervisor: restart-on-failure, retry budget, straggler accounting."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import (
+    FailureInjector, Supervisor, SupervisorConfig,
+)
+
+
+def counter_step(injector=None):
+    def step(state, i):
+        if injector is not None:
+            injector.maybe_fail(i)
+        return {"x": state["x"] + 1.0, "i": jnp.asarray(i + 1)}
+    return step
+
+
+def test_failure_restores_and_completes(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    sup = Supervisor(ckpt, SupervisorConfig(checkpoint_every=5,
+                                            async_checkpoint=False))
+    inj = FailureInjector({12, 17})
+    state = {"x": jnp.zeros(()), "i": jnp.asarray(0)}
+    out = sup.run(state, counter_step(inj), num_steps=25)
+    # every step was eventually applied exactly once in the surviving line
+    assert float(out["x"]) == 25.0
+    assert sup.stats.restarts == 2
+    assert sup.stats.checkpoints >= 4
+
+
+def test_out_of_restarts_raises(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    sup = Supervisor(ckpt, SupervisorConfig(checkpoint_every=100,
+                                            max_restarts=1,
+                                            async_checkpoint=False))
+
+    def always_fail(state, i):
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError, match="out of restarts"):
+        sup.run({"x": jnp.zeros(())}, always_fail, num_steps=3)
+
+
+def test_replay_is_deterministic(tmp_path):
+    """After restore, replayed steps produce the same state as no-failure."""
+    ckpt = CheckpointManager(tmp_path)
+    sup = Supervisor(ckpt, SupervisorConfig(checkpoint_every=4,
+                                            async_checkpoint=False))
+    inj = FailureInjector({9})
+
+    def step(state, i):
+        inj.maybe_fail(i)
+        return {"x": state["x"] * 1.5 + i}
+
+    out_fail = sup.run({"x": jnp.ones(())}, step, num_steps=12)
+
+    ref = {"x": jnp.ones(())}
+    for i in range(12):
+        ref = {"x": ref["x"] * 1.5 + i}
+    np.testing.assert_allclose(float(out_fail["x"]), float(ref["x"]),
+                               rtol=1e-6)
+
+
+def test_straggler_detection(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    sup = Supervisor(ckpt, SupervisorConfig(
+        checkpoint_every=1000, straggler_factor=5.0, ewma_alpha=0.5))
+
+    def step(state, i):
+        if i == 6:
+            time.sleep(0.3)
+        else:
+            time.sleep(0.01)
+        return state
+
+    sup.run({"x": jnp.zeros(())}, step, num_steps=10)
+    assert sup.stats.straggler_steps >= 1

@@ -1,0 +1,82 @@
+"""Paper §5.3 block partition: conflict-freedom + coverage properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sptensor import BlockPartition, SparseTensor, \
+    partition_for_workers
+from repro.data.synthetic import planted_tensor
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 4))
+def test_strata_conflict_free(M, N):
+    """Within any stratum, workers own pairwise-distinct digits in EVERY
+    mode — i.e. disjoint factor-row ranges (the paper's 'indexes of the
+    same order … are different')."""
+    part = BlockPartition(tuple([8 * M] * N), M)
+    strata = part.strata()                      # (S, M, N)
+    assert strata.shape == (M ** (N - 1), M, N)
+    for s in range(strata.shape[0]):
+        for n in range(N):
+            digits = strata[s, :, n]
+            assert len(set(digits.tolist())) == M, (s, n, digits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 4))
+def test_strata_cover_all_blocks(M, N):
+    """Every one of the M^N blocks appears in exactly one (stratum, worker)."""
+    part = BlockPartition(tuple([4 * M] * N), M)
+    strata = part.strata()
+    seen = set()
+    for s in range(strata.shape[0]):
+        for m in range(M):
+            seen.add(tuple(strata[s, m].tolist()))
+    assert len(seen) == M ** N
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31), st.integers(2, 4), st.integers(2, 3))
+def test_assign_is_inverse_of_strata(seed, M, N):
+    rng = np.random.default_rng(seed)
+    dims = tuple(int(x) for x in rng.integers(M, 5 * M, size=N))
+    part = BlockPartition(dims, M)
+    idx = np.stack(
+        [rng.integers(0, d, size=50) for d in dims], axis=1
+    )
+    stratum, worker = part.assign(idx)
+    strata = part.strata()
+    digits = part.block_of(idx)
+    for e in range(len(idx)):
+        np.testing.assert_array_equal(
+            strata[stratum[e], worker[e]], digits[e])
+
+
+def test_partition_for_workers_masks_and_values():
+    t = planted_tensor((40, 30, 20), 2000, seed=0)
+    out = partition_for_workers(t, 2)
+    idx, val, mask = (np.asarray(out["indices"]), np.asarray(out["values"]),
+                      np.asarray(out["mask"]))
+    assert mask.sum() == t.nnz                     # every nonzero lands once
+    # bucket contents actually belong to the right block
+    part = out["partition"]
+    S, M, L, N = idx.shape
+    strata = part.strata()
+    for s in range(S):
+        for m in range(M):
+            valid = mask[s, m]
+            if not valid.any():
+                continue
+            digs = part.block_of(idx[s, m][valid])
+            expect = strata[s, m]
+            assert (digs == expect[None, :]).all()
+
+
+def test_mode_boundaries_balanced():
+    part = BlockPartition((100, 37), 4)
+    for n, d in enumerate((100, 37)):
+        b = part.mode_boundaries(n)
+        assert b[0] == 0 and b[-1] == d
+        sizes = np.diff(b)
+        assert sizes.max() - sizes.min() <= 1 or d % 4 == 0

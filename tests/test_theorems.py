@@ -1,0 +1,114 @@
+"""Property tests for the paper's Theorems 1 & 2 and Kruskal-core algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kruskal
+
+
+
+def _vecs(draw, n_modes, dim_max=5):
+    dims = [draw(st.integers(1, dim_max)) for _ in range(n_modes)]
+    xs = [
+        np.asarray(
+            draw(st.lists(st.floats(-2, 2), min_size=d, max_size=d)),
+            dtype=np.float64,
+        )
+        for d in dims
+    ]
+    return dims, xs
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_theorem1_identity(data):
+    """(⊗x)(⊗y)ᵀ == Π_n x^(n) y^(n)ᵀ — exponential form = linear form."""
+    n = data.draw(st.integers(2, 4))
+    dims, xs = _vecs(data.draw, n)
+    _, ys = (dims, [
+        np.asarray(
+            data.draw(st.lists(st.floats(-2, 2), min_size=d, max_size=d)),
+            dtype=np.float64,
+        )
+        for d in dims
+    ])
+    lhs = kruskal.theorem1_lhs([jnp.asarray(x) for x in xs],
+                               [jnp.asarray(y) for y in ys])
+    rhs = kruskal.theorem1_rhs([jnp.asarray(x) for x in xs],
+                               [jnp.asarray(y) for y in ys])
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_theorem2_identity(data):
+    """(⊗x)(⊗Y)ᵀ == ⊗_n (x^(n) Y^(n)ᵀ)."""
+    n = data.draw(st.integers(2, 3))
+    dims, xs = _vecs(data.draw, n, dim_max=4)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    Ys = [rng.normal(size=(data.draw(st.integers(1, 3)), d))
+          for d in dims]
+    lhs = kruskal.theorem2_lhs([jnp.asarray(x) for x in xs],
+                               [jnp.asarray(Y) for Y in Ys])
+    rhs = kruskal.theorem2_rhs([jnp.asarray(x) for x in xs],
+                               [jnp.asarray(Y) for Y in Ys])
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31), st.integers(2, 4), st.integers(1, 4),
+       st.integers(1, 4))
+def test_exclusive_products_division_free(seed, n_modes, batch, rank):
+    """excl[n] == Π_{k≠n} c[k], incl. exact zeros (no division blowups)."""
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(n_modes, batch, rank))
+    c[rng.random(c.shape) < 0.2] = 0.0  # force zeros
+    full, excl = kruskal.exclusive_products(jnp.asarray(c))
+    ref_full = np.prod(c, axis=0)
+    np.testing.assert_allclose(np.asarray(full), ref_full, rtol=2e-5,
+                               atol=1e-6)
+    for n in range(n_modes):
+        ref = np.prod(np.delete(c, n, axis=0), axis=0)
+        np.testing.assert_allclose(np.asarray(excl[n]), ref, rtol=2e-5,
+                                   atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31))
+def test_kruskal_prediction_equals_dense_core_contraction(seed):
+    """Σ_r Π_n ⟨a,b_r⟩ == contraction of the materialized Kruskal core."""
+    rng = np.random.default_rng(seed)
+    N, J, R, B = 3, 3, 2, 5
+    rows = [jnp.asarray(rng.normal(size=(B, J))) for _ in range(N)]
+    bfs = [jnp.asarray(rng.normal(size=(J, R))) for _ in range(N)]
+    pred = kruskal.predict_from_rows(rows, bfs)
+    core = kruskal.kruskal_to_core(bfs)        # (J,J,J)
+    ref = jnp.einsum("abc,za,zb,zc->z", core, *rows)
+    np.testing.assert_allclose(np.asarray(pred), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_kruskal_matricization_matches_paper_eq9():
+    """Ĝ^(n) = B^(n)(B^(N)⊙…⊙B^(n+1)⊙B^(n-1)⊙…⊙B^(1))ᵀ."""
+    rng = np.random.default_rng(0)
+    J, R = 3, 2
+    bfs = [jnp.asarray(rng.normal(size=(J, R))) for _ in range(3)]
+    core = kruskal.kruskal_to_core(bfs)
+    for n in range(3):
+        rest = [k for k in range(3) if k != n]
+        # paper unfolding: earlier remaining modes vary fastest (Fortran)
+        unf = np.transpose(np.asarray(core), [n] + rest).reshape(
+            J, -1, order="F")
+        # khatri-rao of remaining factors, descending then matching the
+        # column-major unfolding order (ascending modes fastest-first)
+        kr = np.zeros((J ** 2, 2))
+        for r in range(R):
+            v = np.asarray(kruskal.kron_vec(
+                [bfs[k][:, r] for k in rest]))
+            kr[:, r] = v
+        ref = np.asarray(bfs[n]) @ kr.T
+        np.testing.assert_allclose(unf, ref, rtol=3e-5, atol=3e-6)
