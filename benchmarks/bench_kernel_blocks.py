@@ -1,4 +1,4 @@
-"""Tables 8–12 analogue: kernel block-shape sweep (VMEM residency).
+"""Tables 8–12 analogue: kernel block-shape sweep + fused-pipeline compare.
 
 The paper compares shared vs global memory placement of the core factors.
 The TPU analogue is the BlockSpec batch-tile (``block_b``) of the
@@ -7,12 +7,24 @@ resident B^(n) factors until the tile footprint approaches the ~16 MB VMEM
 budget. We report the analytic VMEM footprint per grid step (the structural
 quantity that decides residency on real hardware) plus interpret-mode
 timing for relative ordering.
+
+The second sweep is the cuFasterTucker-style fusion compare: the UNFUSED
+pipeline (forward ``kruskal_contract`` kernel + jnp Eq.13/17 gradient ops)
+vs the FUSED ``kruskal_grad`` kernel that does the whole per-nonzero
+forward+gradient pass in ONE ``pallas_call``.  We also count
+``pallas_call`` equations in the jaxpr of ``batch_gradients`` on the
+fused backend — the structural check that the hot path really is a single
+kernel launch per gradient stage.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import fasttucker as ft
+from repro.kernels.dispatch import count_pallas_calls
 from repro.kernels.kruskal_contract import kruskal_contract
+from repro.kernels.kruskal_grad import kruskal_grad
 
 from .common import row, time_call
 
@@ -25,10 +37,30 @@ def vmem_bytes(block_b: int) -> int:
     return 4 * (N * block_b * J + N * J * R + N * block_b * R + block_b)
 
 
+def vmem_bytes_fused(block_b: int) -> int:
+    # adds row-grad tile (N,bt,J), core accumulator (N,J,R), err/val/mask
+    return vmem_bytes(block_b) + 4 * (
+        N * block_b * J + N * J * R + 3 * block_b
+    )
+
+
+def _unfused_grads(a, b, val):
+    """Forward kernel + jnp gradient stage (the pre-fusion pipeline)."""
+    pred, pexc = kruskal_contract(a, b, block_b=512, interpret=True)
+    err = pred - val
+    w_core = err / val.shape[0]
+    rg = err[None, :, None] * jnp.einsum("nbr,njr->nbj", pexc, b)
+    cg = jnp.einsum("nbj,nbr->njr", a, w_core[None, :, None] * pexc)
+    return pred, err, rg, cg
+
+
 def run() -> list[str]:
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (N, B, J))
     b = jax.random.normal(key, (N, J, R))
+    val = jax.random.normal(key, (B,))
+    mask = jnp.ones((B,))
+    scal = jnp.asarray([1.0, 1.0 / B, 0.01, 0.01, 1.0], jnp.float32)
     out = []
     for bb in (128, 256, 512, 1024, 2048, 4096):
         us = time_call(
@@ -39,4 +71,35 @@ def run() -> list[str]:
         fits = "fits" if vm < VMEM_BUDGET else "OVER"
         out.append(row(f"tbl8-12/kruskal_block{bb}", us,
                        f"vmem_kb={vm//1024};{fits}"))
+
+    # fused vs unfused gradient pipeline (cuFasterTucker compare)
+    us_unfused = time_call(lambda: _unfused_grads(a, b, val),
+                           warmup=1, iters=3)
+    out.append(row("fusion/unfused_contract+jnp_grads", us_unfused))
+    for bb in (512, 1024, 2048):
+        us = time_call(
+            lambda: kruskal_grad(a, b, val, mask, scal, block_b=bb,
+                                 interpret=True),
+            warmup=1, iters=3,
+        )
+        vm = vmem_bytes_fused(bb)
+        fits = "fits" if vm < VMEM_BUDGET else "OVER"
+        out.append(row(f"fusion/fused_kruskal_grad_block{bb}", us,
+                       f"vmem_kb={vm//1024};{fits}"))
+
+    # structural check: batch_gradients on the fused backend is ONE
+    # pallas_call (contraction + Eq.13/17 gradients in a single launch)
+    cfg = ft.FastTuckerConfig(dims=(64, 64, 64), ranks=(J,) * N,
+                              core_rank=R, batch_size=256,
+                              backend="pallas_interpret")
+    params = ft.init_params(jax.random.PRNGKey(1), cfg)
+    idx = jax.random.randint(jax.random.PRNGKey(2), (256, N), 0, 64)
+    v = jax.random.normal(jax.random.PRNGKey(3), (256,))
+    jaxpr = jax.make_jaxpr(
+        lambda p, i, x: ft.batch_gradients(
+            p, i, x, 0.01, 0.01, backend="pallas_interpret")
+    )(params, idx, v)
+    n_calls = count_pallas_calls(jaxpr)
+    out.append(row("fusion/batch_gradients_pallas_calls", float(n_calls),
+                   "want=1"))
     return out

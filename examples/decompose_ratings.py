@@ -19,15 +19,23 @@ from repro.data.synthetic import ratings_tensor
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=800)
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend: xla | pallas | pallas_interpret")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ratings_ckpt")
     args = ap.parse_args()
+
+    from repro.kernels import dispatch
+    backend = dispatch.resolve_backend_name(args.backend)
+    dispatch.get_backend(backend)  # fail fast on typos, before data gen
+    print(f"kernel backend: {backend}")
 
     dims = (4802, 1777, 218)   # Netflix / 100 per mode
     tensor = ratings_tensor(dims, nnz=800_000, seed=0)
     train_t, test_t = tensor.split(0.1)
 
     cfg = FastTuckerConfig(dims=dims, ranks=(8, 8, 8), core_rank=8,
-                           batch_size=8192, alpha_a=0.005, alpha_b=0.0035)
+                           batch_size=8192, alpha_a=0.005, alpha_b=0.0035,
+                           backend=backend)
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
 
     key = jax.random.PRNGKey(0)

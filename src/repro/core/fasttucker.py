@@ -15,22 +15,43 @@ with Pexc^(n)[r] = Π_{k≠n} c_r^(k) (division-free exclusive products).
 The factored forms reduce the paper's exponential ``O(Π J_k)`` coefficient
 construction to linear ``O(R Σ J_k)`` — Theorems 1 & 2.
 
-Everything here is the *pure-jnp reference path*; ``use_kernel=True`` routes
-the fused per-sample contraction through the Pallas TPU kernel
-(`repro.kernels.ops.kruskal_contract`), identical numerics.
+Kernel selection goes through the named-backend registry
+(``repro.kernels.dispatch``): ``FastTuckerConfig(backend="xla")`` is the
+pure-jnp reference path, ``"pallas"`` / ``"pallas_interpret"`` route the
+ENTIRE hot path — contraction, Eq.13/17 gradients, and the factor-row
+scatter — through the fused Pallas kernels, identical numerics.  The old
+``use_kernel: bool`` switch is kept as a deprecated shim.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .kruskal import exclusive_products, mode_dots
+from repro.kernels import dispatch
 from .sampling import sample_batch_arrays
 from .sptensor import SparseTensor
+
+
+def _resolve_backend(
+    backend: str | None, use_kernel: bool | None, caller: str
+) -> str:
+    """Map the deprecated ``use_kernel`` flag onto a backend name."""
+    if use_kernel is not None:
+        warnings.warn(
+            f"{caller}(use_kernel=...) is deprecated; pass "
+            "backend='xla'/'pallas'/'pallas_interpret' instead",
+            DeprecationWarning, stacklevel=3,
+        )
+        if backend is None:
+            backend = (
+                dispatch.default_pallas_backend() if use_kernel else "xla"
+            )
+    return dispatch.resolve_backend_name(backend)
 
 
 class FastTuckerParams(NamedTuple):
@@ -52,7 +73,19 @@ class FastTuckerConfig:
     batch_size: int = 4096          # |Ψ|
     init_scale: float | None = None
     update_order: str = "jacobi"    # "jacobi" | "gauss_seidel"
-    use_kernel: bool = False        # route contraction through Pallas kernel
+    backend: str = "xla"            # kernel backend (repro.kernels.dispatch)
+    use_kernel: dataclasses.InitVar[bool | None] = None  # DEPRECATED shim
+
+    def __post_init__(self, use_kernel: bool | None) -> None:
+        if use_kernel is not None:
+            warnings.warn(
+                "FastTuckerConfig(use_kernel=...) is deprecated; use "
+                "backend='xla'/'pallas'/'pallas_interpret'",
+                DeprecationWarning, stacklevel=2,
+            )
+            if use_kernel and self.backend == "xla":
+                object.__setattr__(
+                    self, "backend", dispatch.default_pallas_backend())
 
     @property
     def order(self) -> int:
@@ -101,12 +134,24 @@ def gather_rows(
     return tuple(f[idx[:, n]] for n, f in enumerate(factors))
 
 
-def predict(params: FastTuckerParams, idx: jax.Array) -> jax.Array:
-    """x̂ for a batch of indices (B, N) → (B,)."""
+def predict(
+    params: FastTuckerParams, idx: jax.Array, backend: str | None = None
+) -> jax.Array:
+    """x̂ for a batch of indices (B, N) → (B,).
+
+    Differentiable on every backend: the Pallas flavors go through
+    ``dispatch.kruskal_predict`` (a ``jax.custom_vjp`` whose backward pass
+    is the fused gradient kernel), so ``jax.grad`` of any loss built on
+    this stays kernel-resident.
+    """
+    backend = dispatch.resolve_backend_name(backend)
     rows = gather_rows(params.factors, idx)
-    c = mode_dots(rows, params.core_factors)
-    full, _ = exclusive_products(c)
-    return jnp.sum(full, axis=-1)
+    if backend == "xla":
+        # natively differentiable; skip the custom_vjp on the reference path
+        pred, _ = dispatch.get_backend("xla").kruskal_contract(
+            rows, params.core_factors)
+        return pred
+    return dispatch.kruskal_predict(backend, rows, params.core_factors)
 
 
 def sampled_loss(
@@ -116,6 +161,7 @@ def sampled_loss(
     lambda_a: float,
     lambda_b: float,
     row_mean: bool = False,
+    backend: str | None = None,
 ) -> jax.Array:
     """Sampled objective whose exact gradient the hand-derived forms compute.
 
@@ -126,7 +172,7 @@ def sampled_loss(
     Verified against ``jax.grad`` in tests.
     """
     rows = gather_rows(params.factors, idx)
-    pred = predict(params, idx)
+    pred = predict(params, idx, backend=backend)
     err = pred - val
     B = idx.shape[0]
     red = jnp.mean if row_mean else jnp.sum
@@ -153,64 +199,46 @@ def batch_gradients(
     lambda_a: float,
     lambda_b: float,
     mask: jax.Array | None = None,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
     row_mean: bool = False,
+    backend: str | None = None,
 ) -> BatchGrads:
     """Fused Eq.13 + Eq.17 gradients for the sampled set.
 
     ``mask`` (B,) zeroes contributions of padding entries (distributed path).
     ``row_mean=False`` keeps the paper's per-sample (M=1) row-update
     semantics; the core-factor gradient is always batch-averaged (M=|Ψ|).
-    """
-    rows = gather_rows(params.factors, idx)
-    B = idx.shape[0]
-    if use_kernel:
-        from repro.kernels import ops as kops  # lazy; optional path
-        pred, pexc = kops.kruskal_contract(rows, params.core_factors)
-    else:
-        c = mode_dots(rows, params.core_factors)       # (N, B, R)
-        full, pexc = exclusive_products(c)             # (B,R), (N,B,R)
-        pred = jnp.sum(full, axis=-1)
-    err = pred - val
-    if mask is not None:
-        err = jnp.where(mask, err, 0.0)
-        core_denom = jnp.maximum(jnp.sum(mask), 1.0)
-    else:
-        core_denom = jnp.asarray(float(B))
-    row_denom = core_denom if row_mean else 1.0
-    w_row = err / row_denom                             # (B,)
-    w_core = err / core_denom
 
-    row_grads = []
-    core_grads = []
-    for n in range(len(rows)):
-        pex_n = pexc[n]                                 # (B, R)
-        # Eq.13 part(1)+(3): err·(Pexc B^T); part(2): λ a.
-        d_n = pex_n @ params.core_factors[n].T          # (B, J_n)
-        reg_rows = rows[n]
-        if mask is not None:
-            reg_rows = jnp.where(mask[:, None], reg_rows, 0.0)
-        row_grads.append(
-            w_row[:, None] * d_n + (lambda_a / row_denom) * reg_rows
-        )
-        # Eq.17 all parts: a^T (err ⊙ Pexc) + λ B.
-        core_grads.append(
-            rows[n].T @ (w_core[:, None] * pex_n)
-            + lambda_b * params.core_factors[n]
-        )
-    return BatchGrads(tuple(row_grads), tuple(core_grads), err, pred)
+    The whole computation dispatches to ``backend`` (see
+    ``repro.kernels.dispatch``): on the Pallas flavors the contraction AND
+    both gradient stages run inside a single ``pallas_call``
+    (``repro.kernels.kruskal_grad``). ``use_kernel`` is a deprecated alias
+    for ``backend=<default pallas flavor>``.
+    """
+    backend = _resolve_backend(backend, use_kernel, "batch_gradients")
+    rows = gather_rows(params.factors, idx)
+    kg = dispatch.get_backend(backend).kruskal_grad(
+        rows, params.core_factors, val,
+        mask=mask, lambda_a=lambda_a, lambda_b=lambda_b, row_mean=row_mean,
+    )
+    return BatchGrads(kg.row_grads, kg.core_grads, kg.err, kg.pred)
 
 
 def scatter_row_grads(
     factors: Sequence[jax.Array],
     idx: jax.Array,
     row_grads: Sequence[jax.Array],
+    backend: str | None = None,
 ) -> tuple[jax.Array, ...]:
-    """Σ_b contributions into dense (I_n, J_n) gradients (exact segment sum)."""
+    """Σ_b contributions into dense (I_n, J_n) gradients (exact segment sum).
+
+    On the Pallas backends this is the MXU one-hot ``scatter_accum`` kernel;
+    on "xla" it is ``jax.ops.segment_sum`` — identical results.
+    """
+    bk = dispatch.get_backend(backend)
     outs = []
     for n, f in enumerate(factors):
-        g = jax.ops.segment_sum(row_grads[n], idx[:, n], num_segments=f.shape[0])
-        outs.append(g)
+        outs.append(bk.scatter_accum(row_grads[n], idx[:, n], f.shape[0]))
     return tuple(outs)
 
 
@@ -235,11 +263,13 @@ def _apply_updates(
     lr_b: jax.Array,
     update_factors: bool = True,
     update_core: bool = True,
+    backend: str | None = None,
 ) -> FastTuckerParams:
     factors = params.factors
     core_factors = params.core_factors
     if update_factors:
-        dense = scatter_row_grads(factors, idx, grads.row_grads)
+        dense = scatter_row_grads(factors, idx, grads.row_grads,
+                                  backend=backend)
         factors = tuple(f - lr_a * g for f, g in zip(factors, dense))
     if update_core:
         core_factors = tuple(
@@ -273,11 +303,11 @@ def sgd_step(
             for n in range(cfg.order):
                 grads = batch_gradients(
                     params, idx, val, cfg.lambda_a, cfg.lambda_b,
-                    use_kernel=cfg.use_kernel,
+                    backend=cfg.backend,
                 )
-                g_n = jax.ops.segment_sum(
+                g_n = dispatch.get_backend(cfg.backend).scatter_accum(
                     grads.row_grads[n], idx[:, n],
-                    num_segments=params.factors[n].shape[0],
+                    params.factors[n].shape[0],
                 )
                 new_f = list(params.factors)
                 new_f[n] = params.factors[n] - lr_a * g_n
@@ -285,20 +315,22 @@ def sgd_step(
         if update_core:
             grads = batch_gradients(
                 params, idx, val, cfg.lambda_a, cfg.lambda_b,
-                use_kernel=cfg.use_kernel,
+                backend=cfg.backend,
             )
             params = _apply_updates(
                 params, idx, grads, lr_a, lr_b,
                 update_factors=False, update_core=True,
+                backend=cfg.backend,
             )
     else:  # jacobi: one fused gradient pass, all variables step together
         grads = batch_gradients(
             state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            use_kernel=cfg.use_kernel,
+            backend=cfg.backend,
         )
         params = _apply_updates(
             state.params, idx, grads, lr_a, lr_b,
             update_factors=update_factors, update_core=update_core,
+            backend=cfg.backend,
         )
     return TrainState(params, state.step + 1)
 

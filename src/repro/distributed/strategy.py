@@ -67,9 +67,10 @@ def make_sync_step(cfg: FastTuckerConfig, mesh: Mesh, axis: str = "data",
             key, idx_shard, val_shard, cfg.batch_size)
         grads = batch_gradients(
             params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            use_kernel=cfg.use_kernel,
+            backend=cfg.backend,
         )
-        dense = scatter_row_grads(params.factors, idx, grads.row_grads)
+        dense = scatter_row_grads(params.factors, idx, grads.row_grads,
+                                  backend=cfg.backend)
         if compress:
             new_ef = []
             summed = []
@@ -197,9 +198,10 @@ def make_strata_step(cfg: FastTuckerConfig, mesh: Mesh, plan: StrataPlan,
             lparams = FastTuckerParams(tuple(rot), params.core_factors)
             grads = batch_gradients(
                 lparams, lidx, val, cfg.lambda_a, cfg.lambda_b, mask=msk,
-                use_kernel=cfg.use_kernel,
+                backend=cfg.backend,
             )
-            dense = scatter_row_grads(lparams.factors, lidx, grads.row_grads)
+            dense = scatter_row_grads(lparams.factors, lidx, grads.row_grads,
+                                      backend=cfg.backend)
             lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, step_no)
             lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, step_no)
             new_rot = tuple(f - lr_a * g for f, g in zip(rot, dense))

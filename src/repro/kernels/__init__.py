@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Accelerator kernels for the paper's hot loops, behind a backend registry.
+
+Layout:
+
+    dispatch.py         named-backend registry + resolution
+                        ("xla" | "pallas" | "pallas_interpret";
+                        $REPRO_KERNEL_BACKEND overrides the default)
+    kruskal_contract.py Theorem-1 forward contraction (Pallas)
+    kruskal_grad.py     fused forward + Eq.13/17 gradient pass — the whole
+                        per-nonzero pipeline in ONE pallas_call (Pallas)
+    scatter_accum.py    MXU one-hot scatter for factor-row gradients (Pallas)
+    tucker_matmul.py    Tucker-2 factorized dense layer (Pallas)
+    flash_attention.py  flash attention for the LM workload (Pallas)
+    ref.py              pure-jnp oracles for every kernel (test ground truth)
+    ops.py              legacy wrappers (pre-registry API; delegates to
+                        dispatch's default Pallas flavor)
+
+Call sites select a backend by name — ``FastTuckerConfig(backend=...)``,
+``--backend`` on the launch CLIs — and everything downstream routes through
+``dispatch.get_backend(name)``.
+"""
+from . import dispatch, ref
+from .dispatch import get_backend, register_backend
+
+__all__ = ["dispatch", "ref", "get_backend", "register_backend"]

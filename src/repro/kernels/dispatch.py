@@ -1,0 +1,382 @@
+"""Named kernel-backend registry — one dispatch point for every hot-loop op.
+
+Replaces the old module-global ``repro.kernels.ops.INTERPRET`` flag and the
+``use_kernel: bool`` switch with named backends:
+
+    ``"xla"``              pure-jnp reference path (default; runs anywhere)
+    ``"pallas"``           Pallas kernels compiled via Mosaic (TPU)
+    ``"pallas_interpret"`` Pallas kernels in interpret mode (CPU-testable,
+                           bit-for-bit the same kernel bodies as ``"pallas"``)
+
+Resolution order for ``get_backend(name)``:
+
+    explicit ``name`` argument  >  ``$REPRO_KERNEL_BACKEND``  >  ``"xla"``
+
+All backends speak the core library's tuple-of-modes layout (per-mode
+``(B, J_n)`` gathered rows and ``(J_n, R)`` Kruskal factors with possibly
+distinct ``J_n``); the Pallas backends zero-pad to the stacked ``(N, B, J)``
+kernel layout internally and unpad results — zero padding is exact for every
+op here (dot products and gradients of padded columns are identically zero).
+
+Ops per backend:
+
+    ``kruskal_contract``  Theorem-1 forward: ``(pred, pexc)``
+    ``kruskal_grad``      fused forward + Eq.13/17 gradients (cuFasterTucker
+                          style single-pass; one ``pallas_call`` on the
+                          Pallas backends)
+    ``scatter_accum``     factor-row segment-sum scatter
+    ``tucker_matmul``     Tucker-2 factorized dense layer
+
+New accelerator targets (Triton, CUDA, …) register via
+``register_backend`` without touching any call site.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+DEFAULT_BACKEND = "xla"
+PALLAS_BACKENDS = ("pallas", "pallas_interpret")
+
+
+class KruskalGrads(NamedTuple):
+    """Fused forward+gradient results in the tuple-of-modes layout."""
+    pred: jax.Array                      # (B,)
+    err: jax.Array                       # (B,) masked residual
+    row_grads: tuple[jax.Array, ...]     # per-mode (B, J_n)
+    core_grads: tuple[jax.Array, ...]    # per-mode (J_n, R)
+
+
+def _denominators(
+    batch: int,
+    mask: jax.Array | None,
+    row_mean: bool,
+    core_mean: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """(row_denom ρ, core_denom δ) matching the paper's M=1 semantics."""
+    if core_mean:
+        if mask is not None:
+            core = jnp.maximum(jnp.sum(mask), 1.0).astype(jnp.float32)
+        else:
+            core = jnp.asarray(float(batch), jnp.float32)
+    else:
+        core = jnp.asarray(1.0, jnp.float32)
+    row = core if row_mean else jnp.asarray(1.0, jnp.float32)
+    return row, core
+
+
+# ---------------------------------------------------------------------------
+# "xla" — pure-jnp reference backend
+# ---------------------------------------------------------------------------
+
+class XlaBackend:
+    """Pure-jnp ops; the numerics oracle every kernel backend must match."""
+
+    name = "xla"
+    interpret = None  # not a Pallas backend
+
+    def kruskal_contract(
+        self,
+        rows: Sequence[jax.Array],
+        core_factors: Sequence[jax.Array],
+    ) -> tuple[jax.Array, jax.Array]:
+        from repro.core.kruskal import exclusive_products, mode_dots
+
+        c = mode_dots(rows, core_factors)          # (N, B, R)
+        full, pexc = exclusive_products(c)
+        return jnp.sum(full, axis=-1), pexc
+
+    def kruskal_grad(
+        self,
+        rows: Sequence[jax.Array],
+        core_factors: Sequence[jax.Array],
+        val: jax.Array,
+        *,
+        mask: jax.Array | None = None,
+        lambda_a: float = 0.0,
+        lambda_b: float = 0.0,
+        row_mean: bool = False,
+        core_mean: bool = True,
+        err_override: jax.Array | None = None,
+    ) -> KruskalGrads:
+        pred, pexc = self.kruskal_contract(rows, core_factors)
+        err = err_override if err_override is not None else pred - val
+        if mask is not None:
+            err = jnp.where(mask, err, 0.0)
+        row_denom, core_denom = _denominators(
+            val.shape[0], mask, row_mean, core_mean)
+        w_row = err / row_denom
+        w_core = err / core_denom
+        row_grads = []
+        core_grads = []
+        for n in range(len(rows)):
+            pex_n = pexc[n]                             # (B, R)
+            d_n = pex_n @ core_factors[n].T             # (B, J_n)
+            reg_rows = rows[n]
+            if mask is not None:
+                reg_rows = jnp.where(mask[:, None], reg_rows, 0.0)
+            row_grads.append(
+                w_row[:, None] * d_n + (lambda_a / row_denom) * reg_rows
+            )
+            core_grads.append(
+                rows[n].T @ (w_core[:, None] * pex_n)
+                + lambda_b * core_factors[n]
+            )
+        return KruskalGrads(pred, err, tuple(row_grads), tuple(core_grads))
+
+    def scatter_accum(
+        self, grads: jax.Array, idx: jax.Array, num_rows: int
+    ) -> jax.Array:
+        return jax.ops.segment_sum(grads, idx, num_segments=num_rows)
+
+    def tucker_matmul(self, x, u1, g, u2) -> jax.Array:
+        return ((x @ u1) @ g) @ u2.T
+
+
+# ---------------------------------------------------------------------------
+# "pallas" / "pallas_interpret" — fused kernel backends
+# ---------------------------------------------------------------------------
+
+def _stack_padded_rows(rows: Sequence[jax.Array]) -> jax.Array:
+    jmax = max(r.shape[-1] for r in rows)
+    return jnp.stack(
+        [jnp.pad(r, ((0, 0), (0, jmax - r.shape[-1]))) for r in rows], axis=0
+    )
+
+
+def _stack_padded_factors(core_factors: Sequence[jax.Array]) -> jax.Array:
+    jmax = max(cf.shape[0] for cf in core_factors)
+    return jnp.stack(
+        [jnp.pad(cf, ((0, jmax - cf.shape[0]), (0, 0))) for cf in core_factors],
+        axis=0,
+    )
+
+
+class PallasBackend:
+    """Pallas kernels; ``interpret=True`` runs the same bodies on CPU."""
+
+    def __init__(self, name: str, interpret: bool,
+                 block_b: int = 512, block_i: int = 256):
+        self.name = name
+        self.interpret = interpret
+        self.block_b = block_b
+        self.block_i = block_i
+
+    def kruskal_contract(
+        self,
+        rows: Sequence[jax.Array],
+        core_factors: Sequence[jax.Array],
+    ) -> tuple[jax.Array, jax.Array]:
+        from .kruskal_contract import kruskal_contract as kc
+
+        a = _stack_padded_rows(rows)
+        b = _stack_padded_factors(core_factors)
+        return kc(a, b, block_b=self.block_b, interpret=self.interpret)
+
+    def kruskal_grad(
+        self,
+        rows: Sequence[jax.Array],
+        core_factors: Sequence[jax.Array],
+        val: jax.Array,
+        *,
+        mask: jax.Array | None = None,
+        lambda_a: float = 0.0,
+        lambda_b: float = 0.0,
+        row_mean: bool = False,
+        core_mean: bool = True,
+        err_override: jax.Array | None = None,
+    ) -> KruskalGrads:
+        from .kruskal_grad import kruskal_grad as kg
+
+        a = _stack_padded_rows(rows)
+        b = _stack_padded_factors(core_factors)
+        row_denom, core_denom = _denominators(
+            val.shape[0], mask, row_mean, core_mean)
+        if mask is None:
+            mask_f = jnp.ones_like(val, dtype=a.dtype)
+        else:
+            mask_f = mask.astype(a.dtype)
+        if err_override is not None:
+            # err = (0·pred − (−ḡ))·mask = ḡ exactly — NOT pred − (pred − ḡ),
+            # which cancels catastrophically for |ḡ| < ulp(pred)
+            val_in, pred_coef = -err_override, 0.0
+        else:
+            val_in, pred_coef = val, 1.0
+        scal = jnp.stack([
+            1.0 / row_denom,
+            1.0 / core_denom,
+            jnp.asarray(lambda_a, jnp.float32),
+            jnp.asarray(lambda_b, jnp.float32),
+            jnp.asarray(pred_coef, jnp.float32),
+        ]).astype(a.dtype)
+        pred, err, rg, cg = kg(
+            a, b, val_in.astype(a.dtype), mask_f, scal,
+            block_b=self.block_b, interpret=self.interpret,
+        )
+        row_grads = tuple(
+            rg[n, :, : r.shape[-1]] for n, r in enumerate(rows)
+        )
+        core_grads = tuple(
+            cg[n, : cf.shape[0]] for n, cf in enumerate(core_factors)
+        )
+        return KruskalGrads(pred, err, row_grads, core_grads)
+
+    def scatter_accum(
+        self, grads: jax.Array, idx: jax.Array, num_rows: int
+    ) -> jax.Array:
+        from .scatter_accum import scatter_accum as sa
+
+        return sa(
+            grads, idx, num_rows,
+            block_i=self.block_i, block_b=self.block_b,
+            interpret=self.interpret,
+        )
+
+    def tucker_matmul(self, x, u1, g, u2) -> jax.Array:
+        from .tucker_matmul import tucker_matmul as tm
+
+        return tm(x, u1, g, u2, interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, object] = {}
+
+
+def register_backend(backend, *, overwrite: bool = False) -> None:
+    """Register ``backend`` (any object with the op methods + ``name``)."""
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend_name(name: str | None = None) -> str:
+    """explicit arg > $REPRO_KERNEL_BACKEND > "xla"."""
+    if name:
+        return name
+    return os.environ.get(ENV_VAR) or DEFAULT_BACKEND
+
+
+def get_backend(name: str | None = None):
+    resolved = resolve_backend_name(name)
+    try:
+        return _REGISTRY[resolved]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {resolved!r}; "
+            f"available: {available_backends()}"
+        ) from None
+
+
+def default_pallas_backend() -> str:
+    """The Pallas flavor legacy ``use_kernel=True`` call sites map to.
+
+    Honors ``$REPRO_KERNEL_BACKEND`` when it names a Pallas flavor and the
+    legacy ``$REPRO_PALLAS_COMPILE=1`` escape hatch (compile via Mosaic).
+    """
+    env = os.environ.get(ENV_VAR)
+    if env in PALLAS_BACKENDS:
+        return env
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return "pallas"
+    return "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# differentiable entry point
+# ---------------------------------------------------------------------------
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def kruskal_predict(
+    backend_name: str,
+    rows: tuple[jax.Array, ...],
+    core_factors: tuple[jax.Array, ...],
+) -> jax.Array:
+    """Theorem-1 prediction with a kernel-resident custom VJP.
+
+    ``jax.grad`` through this routes BOTH passes through the named backend:
+    the forward contraction kernel, and the fused ``kruskal_grad`` kernel
+    with the cotangent ḡ injected as the residual (``err_override``), unit
+    denominators, and zero regularizers — which then yields exactly
+    ``∂pred/∂rows·ḡ`` and ``∂pred/∂B·ḡ``.
+    """
+    pred, _ = get_backend(backend_name).kruskal_contract(rows, core_factors)
+    return pred
+
+
+def _kruskal_predict_fwd(backend_name, rows, core_factors):
+    pred, _ = get_backend(backend_name).kruskal_contract(rows, core_factors)
+    return pred, (rows, core_factors)
+
+
+def _kruskal_predict_bwd(backend_name, residuals, g):
+    rows, core_factors = residuals
+    kg = get_backend(backend_name).kruskal_grad(
+        rows, core_factors, jnp.zeros_like(g),
+        mask=None, lambda_a=0.0, lambda_b=0.0,
+        row_mean=False, core_mean=False, err_override=g,
+    )
+    return tuple(kg.row_grads), tuple(kg.core_grads)
+
+
+kruskal_predict.defvjp(_kruskal_predict_fwd, _kruskal_predict_bwd)
+
+
+# ---------------------------------------------------------------------------
+# introspection helpers
+# ---------------------------------------------------------------------------
+
+def count_pallas_calls(jaxpr) -> int:
+    """Recursively count ``pallas_call`` equations in a (closed) jaxpr.
+
+    Structural check used by tests/benchmarks that the fused path lowers
+    to a single kernel launch.
+    """
+    total = 0
+    eqns = jaxpr.jaxpr.eqns if hasattr(jaxpr, "jaxpr") else jaxpr.eqns
+    for eqn in eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        for v in eqn.params.values():
+            # sub-jaxprs may sit directly in a param (pjit) or inside a
+            # tuple/list of them (lax.cond/switch branches)
+            items = v if isinstance(v, (tuple, list)) else (v,)
+            for item in items:
+                if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                    total += count_pallas_calls(item)
+    return total
+
+
+register_backend(XlaBackend())
+register_backend(PallasBackend("pallas", interpret=False))
+register_backend(PallasBackend("pallas_interpret", interpret=True))
+
+
+__all__ = [
+    "ENV_VAR",
+    "DEFAULT_BACKEND",
+    "PALLAS_BACKENDS",
+    "KruskalGrads",
+    "XlaBackend",
+    "PallasBackend",
+    "register_backend",
+    "available_backends",
+    "resolve_backend_name",
+    "get_backend",
+    "default_pallas_backend",
+    "kruskal_predict",
+    "count_pallas_calls",
+]

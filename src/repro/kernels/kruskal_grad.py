@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: fully fused Theorem-1/2 forward + gradient pass.
+
+One ``pallas_call`` tile pass computes, for a VMEM tile of BT sampled
+nonzeros, the entire per-sample hot loop of the paper (Algorithm 1
+lines 4–10 *and* the Eq. 13 / Eq. 17 gradient stage that the follow-up
+cuFasterTucker fuses on-GPU):
+
+    c[n]     = a_tile[n] @ B[n]                 # (BT,J)×(J,R) on the MXU
+    pexc[n]  = Π_{k≠n} c[k]                     # division-free prefix/suffix
+    pred     = Σ_r Π_n c[n]
+    err      = (pred − x) ⊙ mask
+    drow[n]  = (err/ρ)·(pexc[n] B^(n)ᵀ) + (λ_a/ρ)·mask·a_tile[n]   # Eq. 13
+    dcore[n] += a_tile[n]ᵀ (err/δ ⊙ pexc[n])                        # Eq. 17
+
+with ρ = row denominator, δ = core denominator (batch / valid-sample
+mean), both precomputed on the host side of the trace and passed in as a
+small scalar vector.  The Kruskal factors ``B^(n)`` stay fully
+VMEM-resident across every grid step (the shared-memory trick of
+``kruskal_contract.py``), and the (N, J, R) core-gradient accumulator
+uses the revisiting-output trick: its block index is constant across the
+1-D batch grid, so Pallas keeps it in VMEM and the kernel accumulates
+partial sums across tiles, seeding tile 0 with the λ_b·B^(n) regularizer.
+
+Zero padding is exact end to end: padded J columns produce zero dot
+products and zero gradient columns; padded batch rows carry mask 0 and
+therefore contribute nothing to the core accumulator.
+
+Grid: 1-D over batch tiles. VMEM per step ≈ 2·N·BT·J + 2·N·J·R +
+N·BT·R + 3·BT floats — for N=4, BT=512, J=R=32 about 1.2 MB, far under
+the ~16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# layout of the scalar vector input; PRED_COEF generalizes the residual to
+# err = (pred_coef·pred − val)·mask — 1 for training (err = pred − x), 0 for
+# the custom-VJP backward pass, which passes val = −ḡ so err = ḡ EXACTLY
+# (computing pred − (pred − ḡ) instead would catastrophically cancel in f32
+# whenever |ḡ| is below ulp(pred), silently zeroing gradients).
+(SCAL_INV_ROW, SCAL_INV_CORE, SCAL_LAM_A, SCAL_LAM_B,
+ SCAL_PRED_COEF) = range(5)
+NUM_SCALARS = 5
+
+
+def _kernel(scal_ref, a_ref, b_ref, val_ref, mask_ref,
+            pred_ref, err_ref, rg_ref, cg_ref, *, n_modes: int):
+    # scal_ref: (4,); a_ref: (N, BT, J); b_ref: (N, J, R);
+    # val/mask_ref: (BT,); pred/err_ref: (BT,);
+    # rg_ref: (N, BT, J); cg_ref: (N, J, R) — revisited across the grid.
+    cs = []
+    for n in range(n_modes):  # static unroll over modes (N ≤ 10)
+        cs.append(
+            jax.lax.dot_general(
+                a_ref[n], b_ref[n], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        )
+    prefix = [None] * n_modes
+    suffix = [None] * n_modes
+    acc = jnp.ones_like(cs[0])
+    for n in range(n_modes):
+        prefix[n] = acc
+        acc = acc * cs[n]
+    full = acc
+    acc = jnp.ones_like(cs[0])
+    for n in reversed(range(n_modes)):
+        suffix[n] = acc
+        acc = acc * cs[n]
+
+    pred = jnp.sum(full, axis=-1)                       # (BT,) f32
+    mask = mask_ref[...].astype(pred.dtype)
+    err = (scal_ref[SCAL_PRED_COEF] * pred
+           - val_ref[...].astype(pred.dtype)) * mask
+    pred_ref[...] = pred.astype(pred_ref.dtype)
+    err_ref[...] = err.astype(err_ref.dtype)
+
+    inv_row = scal_ref[SCAL_INV_ROW]
+    inv_core = scal_ref[SCAL_INV_CORE]
+    lam_a = scal_ref[SCAL_LAM_A]
+    lam_b = scal_ref[SCAL_LAM_B]
+    w_row = err * inv_row                               # (BT,)
+    w_core = err * inv_core
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed_core():                                   # λ_b·B^(n) once
+        cg_ref[...] = (lam_b * b_ref[...]).astype(cg_ref.dtype)
+
+    for n in range(n_modes):
+        pexc_n = prefix[n] * suffix[n]                  # (BT, R)
+        # Eq. 13: err·(pexc B^T) + λ_a·a (padding rows killed via mask)
+        d_n = jax.lax.dot_general(
+            pexc_n, b_ref[n], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                               # (BT, J)
+        rg_ref[n] = (
+            w_row[:, None] * d_n
+            + (lam_a * inv_row) * mask[:, None] * a_ref[n]
+        ).astype(rg_ref.dtype)
+        # Eq. 17 partial: aᵀ (err ⊙ pexc), accumulated across batch tiles
+        cg_ref[n] += jax.lax.dot_general(
+            a_ref[n], w_core[:, None] * pexc_n,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(cg_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def kruskal_grad(
+    a_rows: jax.Array,  # (N, B, J)  gathered factor rows (J zero-padded)
+    b_fac: jax.Array,   # (N, J, R)  Kruskal core factors (zero-padded)
+    val: jax.Array,     # (B,)       sampled tensor values
+    mask: jax.Array,    # (B,)       1.0 valid / 0.0 padding
+    scal: jax.Array,    # (5,)  [1/ρ_row, 1/δ_core, λ_a, λ_b, pred_coef]
+    *,
+    block_b: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused contraction + Eq.13/17 gradients in a single ``pallas_call``.
+
+    Returns ``(pred (B,), err (B,), row_grads (N, B, J),
+    core_grads (N, J, R))``; ``core_grads`` already includes the λ_b·B
+    regularizer term.
+    """
+    N, B, J = a_rows.shape
+    R = b_fac.shape[-1]
+    bt = min(block_b, B)
+    if B % bt:
+        pad = bt - B % bt
+        a_rows = jnp.pad(a_rows, ((0, 0), (0, pad), (0, 0)))
+        val = jnp.pad(val, (0, pad))
+        mask = jnp.pad(mask, (0, pad))  # zeros: no core/err contribution
+    Bp = a_rows.shape[1]
+    grid = (Bp // bt,)
+    pred, err, rg, cg = pl.pallas_call(
+        functools.partial(_kernel, n_modes=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((NUM_SCALARS,), lambda i: (0,)),
+            pl.BlockSpec((N, bt, J), lambda i: (0, i, 0)),
+            pl.BlockSpec((N, J, R), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((N, bt, J), lambda i: (0, i, 0)),
+            pl.BlockSpec((N, J, R), lambda i: (0, 0, 0)),  # revisited
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), a_rows.dtype),
+            jax.ShapeDtypeStruct((Bp,), a_rows.dtype),
+            jax.ShapeDtypeStruct((N, Bp, J), a_rows.dtype),
+            jax.ShapeDtypeStruct((N, J, R), a_rows.dtype),
+        ],
+        interpret=interpret,
+    )(scal, a_rows, b_fac, val, mask)
+    return pred[:B], err[:B], rg[:, :B], cg

@@ -1,9 +1,13 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Legacy jit'd wrappers for the Pallas kernels (kept for back-compat).
 
-On this CPU container the kernels run in ``interpret=True`` mode (the kernel
-body executes in Python, validated against ``ref.py``); on TPU set
-``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1) to
-compile via Mosaic.
+New code should go through ``repro.kernels.dispatch.get_backend`` — the
+named-backend registry ("xla" / "pallas" / "pallas_interpret") that replaced
+the module-global ``INTERPRET`` flag that used to live here.  These wrappers
+now delegate to the registry's default *Pallas* flavor, resolved per call:
+
+    $REPRO_KERNEL_BACKEND ∈ {pallas, pallas_interpret}  → that flavor
+    $REPRO_PALLAS_COMPILE=1 (legacy)                    → "pallas" (Mosaic)
+    otherwise                                           → "pallas_interpret"
 
 ``kruskal_contract`` accepts the core library's tuple-of-modes layout
 (per-mode (B, J_n) rows and (J_n, R) factors with possibly distinct J_n),
@@ -12,25 +16,25 @@ zero padding is exact for dot products.
 """
 from __future__ import annotations
 
-import os
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
-from .kruskal_contract import kruskal_contract as _kc_kernel
+from .dispatch import default_pallas_backend, get_backend
 from .scatter_accum import scatter_accum as _sa_kernel
 from .tucker_matmul import tucker_matmul as _tm_kernel
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+# Legacy knob: old callers set ``ops.INTERPRET = False`` to compile via
+# Mosaic.  Still honored when explicitly assigned; ``None`` (the default)
+# defers to the registry/env resolution above.
+INTERPRET: bool | None = None
 
 
-def _stack_padded(rows: Sequence[jax.Array]) -> jax.Array:
-    jmax = max(r.shape[-1] for r in rows)
-    return jnp.stack(
-        [jnp.pad(r, ((0, 0), (0, jmax - r.shape[-1]))) for r in rows], axis=0
-    )
+def _pallas():
+    if INTERPRET is not None:
+        return get_backend("pallas_interpret" if INTERPRET else "pallas")
+    return get_backend(default_pallas_backend())
 
 
 def kruskal_contract(
@@ -40,16 +44,12 @@ def kruskal_contract(
     block_b: int = 512,
 ) -> tuple[jax.Array, jax.Array]:
     """(pred (B,), pexc (N, B, R)) via the fused Pallas kernel."""
-    a = _stack_padded(rows)
-    jmax = a.shape[-1]
-    b = jnp.stack(
-        [
-            jnp.pad(cf, ((0, jmax - cf.shape[0]), (0, 0)))
-            for cf in core_factors
-        ],
-        axis=0,
-    )
-    return _kc_kernel(a, b, block_b=block_b, interpret=INTERPRET)
+    bk = _pallas()
+    if block_b != bk.block_b:
+        from .dispatch import PallasBackend
+
+        bk = PallasBackend(bk.name, bk.interpret, block_b=block_b)
+    return bk.kruskal_contract(rows, core_factors)
 
 
 def scatter_accum(
@@ -58,7 +58,7 @@ def scatter_accum(
 ) -> jax.Array:
     return _sa_kernel(
         grads, idx, num_rows,
-        block_i=block_i, block_b=block_b, interpret=INTERPRET,
+        block_i=block_i, block_b=block_b, interpret=_pallas().interpret,
     )
 
 
@@ -69,7 +69,7 @@ def tucker_matmul(
     return _tm_kernel(
         x, u1, g, u2,
         block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=INTERPRET,
+        interpret=_pallas().interpret,
     )
 
 

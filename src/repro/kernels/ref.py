@@ -23,6 +23,34 @@ def kruskal_contract_ref(
     return pred, pexc
 
 
+def kruskal_grad_ref(
+    a_rows: jax.Array,  # (N, B, J)  gathered factor rows (J zero-padded)
+    b_fac: jax.Array,   # (N, J, R)  Kruskal core factors (zero-padded)
+    val: jax.Array,     # (B,)
+    mask: jax.Array,    # (B,)  1.0 valid / 0.0 padding
+    scal: jax.Array,    # (5,)  [1/ρ_row, 1/δ_core, λ_a, λ_b, pred_coef]
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused forward+gradient kernel (same stacked layout).
+
+    Returns (pred (B,), err (B,), row_grads (N,B,J), core_grads (N,J,R)).
+    """
+    pred, pexc = kruskal_contract_ref(a_rows, b_fac)
+    inv_row, inv_core, lam_a, lam_b, pred_coef = (
+        scal[i] for i in range(5))
+    err = (pred_coef * pred - val) * mask
+    w_row = err * inv_row
+    w_core = err * inv_core
+    row_grads = (
+        w_row[None, :, None] * jnp.einsum("nbr,njr->nbj", pexc, b_fac)
+        + (lam_a * inv_row) * mask[None, :, None] * a_rows
+    )
+    core_grads = (
+        jnp.einsum("nbj,nbr->njr", a_rows, w_core[None, :, None] * pexc)
+        + lam_b * b_fac
+    )
+    return pred, err, row_grads, core_grads
+
+
 def scatter_accum_ref(
     grads: jax.Array,   # (B, J) per-sample row gradients
     idx: jax.Array,     # (B,)  target rows

@@ -2,10 +2,14 @@
 
 Modes: ``local`` single-device, ``sync`` data-parallel minibatch (+optional
 int8 error-feedback compression), ``strata`` faithful Fig.-2 stratified
-rotation. Example:
+rotation.  ``--backend`` selects the kernel backend from
+``repro.kernels.dispatch`` (``xla`` reference jnp, ``pallas`` compiled,
+``pallas_interpret`` CPU-testable kernels; default resolves
+``$REPRO_KERNEL_BACKEND`` then ``xla``). Example:
 
     PYTHONPATH=src python -m repro.launch.std_train --mode sync \
-        --dims 2000,1500,1000 --nnz 500000 --steps 300 --rank 8 --core-rank 8
+        --dims 2000,1500,1000 --nnz 500000 --steps 300 --rank 8 \
+        --core-rank 8 --backend pallas_interpret
 """
 from __future__ import annotations
 
@@ -42,10 +46,23 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--compress", action="store_true")
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend: xla | pallas | pallas_interpret "
+                         "(default: $REPRO_KERNEL_BACKEND or xla)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="DEPRECATED: alias for --backend "
+                         "pallas/pallas_interpret")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+
+    from repro.kernels import dispatch
+    backend = args.backend
+    if backend is None and args.use_kernel:
+        backend = dispatch.default_pallas_backend()
+        log.warning("--use-kernel is deprecated; use --backend %s", backend)
+    backend = dispatch.resolve_backend_name(backend)
+    dispatch.get_backend(backend)  # fail fast on typos, before data gen
 
     dims = tuple(int(x) for x in args.dims.split(","))
     tensor = planted_tensor(dims, args.nnz, rank=args.rank,
@@ -54,8 +71,9 @@ def main() -> None:
     cfg = FastTuckerConfig(
         dims=dims, ranks=(args.rank,) * len(dims),
         core_rank=args.core_rank, batch_size=args.batch,
-        use_kernel=args.use_kernel,
+        backend=backend,
     )
+    log.info("kernel backend: %s", backend)
     key = jax.random.PRNGKey(0)
     state = init_state(key, cfg)
 

@@ -23,6 +23,26 @@ from .layers import Boxed, dense_init, embed, init_embedding, make_norm, unbox
 from repro.distributed import context as dist_ctx
 
 
+@jax.custom_vjp
+def _grad_safe_barrier(x):
+    # lax.optimization_barrier has no differentiation rule on older jax
+    # (NotImplementedError under jax.grad); the barrier is an identity, so
+    # give it one explicitly — and keep the barrier on the cotangent too,
+    # for the same convert-hoisting reason as the primal.
+    return jax.lax.optimization_barrier(x)
+
+
+def _grad_safe_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _grad_safe_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
@@ -102,7 +122,7 @@ def _run_groups(params, cfg, x, positions, *, caches=None, cache_index=None,
         def body(x, layer_params, layer_cache):
             # barrier: keeps the saved bf16 carry from being convert-hoisted
             # into a second f32 stack by XLA's loop-invariant code motion
-            x = jax.lax.optimization_barrier(x)
+            x = _grad_safe_barrier(x)
             return apply_layer(
                 layer_params, cfg, spec, x,
                 positions=positions, cache=layer_cache,

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.kruskal_contract import kruskal_contract
@@ -23,9 +24,14 @@ def test_kruskal_contract_sweep(N, B, J, R, dtype):
     p1, e1 = kruskal_contract(a, b, block_b=128, interpret=True)
     p2, e2 = ref.kruskal_contract_ref(a, b)
     # bf16: kernel accumulates in f32, ref rounds per-op — compare with a
-    # tolerance scaled to the output magnitude
+    # tolerance scaled to the output magnitude.  f32 also needs a
+    # magnitude-scaled atol: kernel and ref sum the R·Π_n products in
+    # different association orders, so elements that nearly cancel carry
+    # absolute error proportional to the summed-term magnitude (~1e-7·max).
     if dtype == jnp.float32:
-        rtol, atol_p, atol_e = 1e-5, 1e-5, 1e-5
+        rtol = 1e-5
+        atol_p = 1e-6 * float(np.abs(np.asarray(p2, np.float32)).max() + 1)
+        atol_e = 1e-6 * float(np.abs(np.asarray(e2, np.float32)).max() + 1)
     else:
         rtol = 6e-2
         atol_p = 0.05 * float(np.abs(np.asarray(p2, np.float32)).max() + 1)

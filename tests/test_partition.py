@@ -1,7 +1,8 @@
 """Paper §5.3 block partition: conflict-freedom + coverage properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.sptensor import BlockPartition, SparseTensor, \
     partition_for_workers
