@@ -1,26 +1,35 @@
 """Multi-device STD with the paper's stratified Fig.-2 schedule.
 
+Drives the distributed-strategy registry (``repro.distributed``): pick any
+of local / sync / strata / strata_overlap with ``--strategy``; the default
+``strata_overlap`` runs the Latin-hypercube epoch schedule with the factor
+shard rotations double-buffered behind compute.
+
 Simulates 8 devices on CPU (the flag below MUST precede any jax import).
 
-    python examples/multipod_std.py
+    python examples/multipod_std.py [--strategy strata]
 """
+import argparse
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys                                                      # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                                                      # noqa: E402
-import jax.numpy as jnp                                         # noqa: E402
-import numpy as np                                              # noqa: E402
 
 from repro.core import FastTuckerConfig, init_state, rmse_mae   # noqa: E402
 from repro.core import fasttucker as ft                         # noqa: E402
 from repro.data.synthetic import planted_tensor                 # noqa: E402
-from repro.distributed import strategy                          # noqa: E402
+from repro.distributed import get_strategy                      # noqa: E402
 from repro.launch.mesh import make_host_mesh                    # noqa: E402
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="strata_overlap")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
     dims = (512, 384, 256)
     tensor = planted_tensor(dims, 200_000, noise=0.05, seed=0)
     train_t, test_t = tensor.split(0.1)
@@ -29,30 +38,26 @@ def main():
 
     mesh = make_host_mesh()
     M = mesh.devices.size
-    print(f"running the stratified schedule on {M} devices "
+    print(f"running the {args.strategy!r} strategy on {M} devices "
           f"({M}^{len(dims)} = {M**len(dims)} blocks, "
           f"{M**(len(dims)-1)} strata)")
 
-    plan = strategy.StrataPlan.build(train_t, M)
-    state = init_state(jax.random.PRNGKey(0), cfg)
-    params = strategy.pad_factors_for_strata(state.params, plan)
-    step = strategy.make_strata_step(cfg, mesh, plan)
-    n_strata = plan.buckets["indices"].shape[0]
+    strategy = get_strategy(args.strategy)
+    plan = strategy.prepare(train_t, cfg,
+                            mesh if strategy.needs_mesh else None, seed=0)
+    dstate = strategy.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                           jax.random.PRNGKey(1))
+    step = strategy.make_step(plan)
 
-    rng = np.random.default_rng(0)
-    key = jax.random.PRNGKey(1)
     with mesh:
-        for i in range(200):
-            key, sub = jax.random.split(key)
-            s = int(rng.integers(n_strata))
-            params = step(params, jnp.asarray(i), sub, s)
-            if (i + 1) % 50 == 0:
-                trimmed = ft.FastTuckerParams(
-                    tuple(f[: dims[n]]
-                          for n, f in enumerate(params.factors)),
-                    params.core_factors)
-                r, m = rmse_mae(trimmed, test_t, ft.predict)
-                print(f"step {i+1:3d}  RMSE {float(r):.4f}")
+        next_eval = 50
+        while int(dstate.step) < args.steps:
+            dstate = step(dstate)
+            if int(dstate.step) >= next_eval:
+                next_eval += 50
+                params = strategy.eval_params(plan, dstate)
+                r, m = rmse_mae(params, test_t, ft.predict)
+                print(f"step {int(dstate.step):3d}  RMSE {float(r):.4f}")
     print("conflict-free multi-device decomposition complete")
 
 

@@ -149,6 +149,22 @@ class BlockPartition:
                     out[s, m, n] = (m + digits[n]) % M
         return out
 
+    def epoch_schedule(self, seed_or_key) -> np.ndarray:
+        """Pre-sampled Latin-hypercube epoch cover: (S,) stratum ids.
+
+        Host-materialized (np.ndarray) because the per-stratum ``ppermute``
+        rotations need STATIC shift amounts at trace time; the permutation
+        itself is drawn on device (``sampling.latin_hypercube_schedule``).
+        Accepts an int seed or a jax PRNG key; digits via
+        ``sampling.stratum_digits``.
+        """
+        from .sampling import latin_hypercube_schedule
+
+        key = (jax.random.PRNGKey(seed_or_key)
+               if isinstance(seed_or_key, int) else seed_or_key)
+        return np.asarray(
+            latin_hypercube_schedule(key, self.num_workers, self.order))
+
     def assign(self, indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Map nonzeros to (stratum, worker).
 

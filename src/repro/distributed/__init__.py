@@ -1,0 +1,39 @@
+"""Distributed layer: sharding rules, mesh context, and the §5.3 strategy
+registry.
+
+``get_strategy("local" | "sync" | "strata" | "strata_overlap")`` returns a
+``DistStrategy`` — the uniform prepare/init/step/eval_params/save/restore
+interface every launcher, example, and benchmark drives. See ``base`` for
+the contract, ``strata``/``overlap`` for the paper's Fig.-2 scheme and its
+communication-hiding variant.
+"""
+from .base import (
+    DistState,
+    DistStrategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+    resolve_strategy_name,
+)
+from .local import LocalStrategy
+from .overlap import StrataOverlapStrategy
+from .strata import StrataStrategy
+from .sync import SyncStrategy
+
+register_strategy(LocalStrategy())
+register_strategy(SyncStrategy())
+register_strategy(StrataStrategy())
+register_strategy(StrataOverlapStrategy())
+
+__all__ = [
+    "DistState",
+    "DistStrategy",
+    "available_strategies",
+    "get_strategy",
+    "register_strategy",
+    "resolve_strategy_name",
+    "LocalStrategy",
+    "SyncStrategy",
+    "StrataStrategy",
+    "StrataOverlapStrategy",
+]

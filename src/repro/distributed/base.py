@@ -1,0 +1,210 @@
+"""Named distributed-strategy registry — §5.3 data division behind one API.
+
+The same pattern as the kernel-backend registry (``repro.kernels.dispatch``)
+one layer up: every multi-device training scheme is a ``DistStrategy``
+registered under a name:
+
+    ``"local"``          single-device SGD (reference trajectory)
+    ``"sync"``           synchronous data-parallel minibatch (psum'd grads)
+    ``"strata"``         the paper's Fig.-2 stratified rotation, one stratum
+                         per step over a pre-sampled Latin-hypercube epoch
+                         schedule
+    ``"strata_overlap"`` same schedule, fused over a chunk of strata with
+                         the shard rotations double-buffered so stratum
+                         s+1's ``ppermute`` is issued alongside stratum s's
+                         remaining compute (communication hiding,
+                         cuFasterTucker-style)
+
+Uniform contract (the launcher drives every strategy through this):
+
+    plan    = strategy.prepare(tensor, cfg, mesh, compress=..., seed=...)
+    dstate  = strategy.init(plan, train_state, key)
+    step_fn = strategy.make_step(plan)
+    dstate  = step_fn(dstate)                   # advances steps_per_call
+    params  = strategy.eval_params(plan, dstate)  # strata row-trim included
+    strategy.save(plan, ckpt, dstate) / strategy.restore(plan, ckpt, dstate)
+
+``DistState`` is one pytree — parameters, step counter, base PRNG key, and
+error-feedback residuals — so checkpoint save/restore is identical across
+strategies, and int8 error-feedback compression (``--compress``) works
+under every strategy, not just ``sync``.
+
+New strategies (hierarchical meshes, async parameter servers, …) register
+via ``register_strategy`` without touching any call site.
+"""
+from __future__ import annotations
+
+import abc
+import os
+import warnings
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fasttucker import FastTuckerConfig, FastTuckerParams, TrainState
+
+ENV_VAR = "REPRO_DIST_STRATEGY"
+DEFAULT_STRATEGY = "local"
+
+
+class DistState(NamedTuple):
+    """Uniform distributed training state (one checkpointable pytree).
+
+    ``ef`` holds the int8 error-feedback residuals when compression is on
+    (strategy-specific shapes: factor-shaped for local/sync, per-device
+    core-factor-shaped for the strata flavors) and is ``()`` otherwise.
+    """
+
+    params: FastTuckerParams
+    step: jax.Array            # int32 global update counter (strata count)
+    key: jax.Array             # base PRNG key; per-step keys are fold_in'd
+    ef: tuple = ()
+
+
+class DistStrategy(abc.ABC):
+    """Interface every distributed training scheme implements."""
+
+    name: str = "?"
+    needs_mesh: bool = True
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @abc.abstractmethod
+    def prepare(self, tensor, cfg: FastTuckerConfig, mesh, *,
+                compress: bool = False, seed: int = 0) -> Any:
+        """Host-side data layout + schedule; returns an opaque plan."""
+
+    @abc.abstractmethod
+    def init(self, plan, state: TrainState, key: jax.Array) -> DistState:
+        """Lift a fresh single-device ``TrainState`` into strategy state."""
+
+    @abc.abstractmethod
+    def make_step(self, plan) -> Callable[[DistState], DistState]:
+        """Build the update function (advances ``steps_per_call`` steps)."""
+
+    def steps_per_call(self, plan) -> int:
+        return 1
+
+    # -- evaluation ----------------------------------------------------------
+
+    def eval_params(self, plan, dstate: DistState) -> FastTuckerParams:
+        """Parameters in the global (unpadded, unrotated) layout.
+
+        The strata flavors override this to trim padded factor rows — the
+        trimming previously inlined at every eval site in ``std_train``.
+        """
+        return dstate.params
+
+    # -- introspection (benchmarks / tests) ----------------------------------
+
+    def lower_step(self, plan, dstate: DistState):
+        """``jax.stages.Lowered`` for one representative compiled step.
+
+        Benchmarks analyze its HLO for per-step collective bytes and
+        communication/compute overlap evidence.
+        """
+        raise NotImplementedError(f"{self.name} has no lowerable step")
+
+    # -- checkpointing (uniform across strategies) ---------------------------
+
+    def save(self, plan, ckpt, dstate: DistState,
+             blocking: bool = True) -> None:
+        ckpt.save(int(dstate.step), dstate, blocking=blocking)
+
+    def restore(self, plan, ckpt, like: DistState,
+                step: int | None = None) -> DistState:
+        restored, _ = ckpt.restore(like, step)
+        return DistState(
+            params=restored.params,
+            step=jnp.asarray(restored.step, jnp.int32),
+            key=restored.key,
+            ef=restored.ef,
+        )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, DistStrategy] = {}
+
+
+def register_strategy(strategy: DistStrategy, *,
+                      overwrite: bool = False) -> None:
+    if strategy.name in _REGISTRY and not overwrite:
+        raise ValueError(f"strategy {strategy.name!r} already registered")
+    _REGISTRY[strategy.name] = strategy
+
+
+def available_strategies() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_strategy_name(name: str | None = None,
+                          mode: str | None = None) -> str:
+    """explicit ``name`` > deprecated ``mode`` > $REPRO_DIST_STRATEGY > local.
+
+    ``mode`` is the pre-registry ``--mode`` flag; passing it warns (same
+    treatment as the kernel registry gave ``--use-kernel``).
+    """
+    if name:
+        return name
+    if mode:
+        warnings.warn(
+            "--mode is deprecated; use --strategy "
+            f"{'/'.join(available_strategies())}",
+            DeprecationWarning, stacklevel=2,
+        )
+        return mode
+    return os.environ.get(ENV_VAR) or DEFAULT_STRATEGY
+
+
+def get_strategy(name: str | None = None,
+                 mode: str | None = None) -> DistStrategy:
+    resolved = resolve_strategy_name(name, mode)
+    try:
+        return _REGISTRY[resolved]
+    except KeyError:
+        raise KeyError(
+            f"unknown distributed strategy {resolved!r}; "
+            f"available: {available_strategies()}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def compressed_reduce(dense, ef, axis: str | None):
+    """int8 error-feedback quantize → (psum over ``axis``) → dequantize.
+
+    ``dense``/``ef`` are matching tuples of arrays. With ``axis=None`` the
+    reduction is skipped (single-device: the quantization round-trip and
+    residual carry still apply, so ``local --compress`` is the numerics
+    reference for the distributed compressed paths).
+    """
+    from repro.optim.compression import compress_ef, decompress
+
+    out, new_ef = [], []
+    for g, e in zip(dense, ef):
+        q, scale, ne = compress_ef(g, e)
+        deq = decompress(q, scale)
+        if axis is not None:
+            deq = jax.lax.psum(deq, axis)
+        out.append(deq)
+        new_ef.append(ne)
+    return tuple(out), tuple(new_ef)
+
+
+__all__ = [
+    "ENV_VAR",
+    "DEFAULT_STRATEGY",
+    "DistState",
+    "DistStrategy",
+    "register_strategy",
+    "available_strategies",
+    "resolve_strategy_name",
+    "get_strategy",
+    "compressed_reduce",
+]

@@ -1,247 +1,38 @@
-"""Multi-device STD strategies — the paper's §5.3 scheme on a JAX mesh.
+"""DEPRECATED compatibility shim — the strategy layer moved to a registry.
 
-Two modes:
+This module used to hold the two hand-rolled multi-device STD modes. They
+now live behind the named strategy registry (``repro.distributed``):
 
-``sync``  — synchronous minibatch (TPU-native adaptation): every device
-            samples from its local shard of Ω, computes dense factor/core
-            gradients, ``psum`` over the data axis, identical update
-            everywhere. Exact, stateless, composes with gradient
-            compression. Factors replicated per data shard.
+    from repro.distributed import get_strategy
+    strategy = get_strategy("strata")          # or sync / strata_overlap
 
-``strata`` — the faithful cuFastTucker Fig. 2 analogue: factor matrices are
-            ROW-SHARDED over M devices; each step draws one stratum s (a
-            generalized diagonal of the M^N block grid), ``ppermute``-rotates
-            each mode's factor shards by the stratum digit so that every
-            device holds exactly the rows its bucket touches, updates
-            locally (conflict-free by construction), and rotates back.
-            Communication per step = 2·N shard rotations (point-to-point),
-            independent of M — the property that made the paper's M-GPU
-            scaling near-linear. Core factors B^(n) are small → replicated,
-            gradient psum'd (paper: "accumulate all gradients then update").
+The old entry points are re-exported here unchanged so existing call sites
+keep working:
+
+    ``shard_nonzeros`` / ``make_sync_step`` / ``init_error_feedback``
+        → ``repro.distributed.sync``
+    ``StrataPlan`` (now ``StrataLayout``) / ``pad_factors_for_strata`` /
+    ``make_strata_step``
+        → ``repro.distributed.strata``
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.core.fasttucker import (
-    FastTuckerConfig, FastTuckerParams, batch_gradients, dynamic_lr,
-    scatter_row_grads,
+from .strata import (                                         # noqa: F401
+    StrataLayout as StrataPlan,
+    make_strata_step,
+    pad_factors_for_strata,
 )
-from repro.core.sampling import sample_batch_arrays
-from repro.core.sptensor import SparseTensor, partition_for_workers
-from repro.optim.compression import compress_ef, decompress
+from .sync import (                                           # noqa: F401
+    init_error_feedback,
+    make_sync_step,
+    shard_nonzeros,
+)
 
-
-# ---------------------------------------------------------------------------
-# sync mode
-# ---------------------------------------------------------------------------
-
-def shard_nonzeros(tensor: SparseTensor, num_shards: int):
-    """Pad + split Ω round-robin into (num_shards, L, ·) arrays."""
-    nnz = tensor.nnz
-    L = -(-nnz // num_shards)
-    pad = L * num_shards - nnz
-    idx = jnp.concatenate([tensor.indices, tensor.indices[:pad]], 0)
-    val = jnp.concatenate([tensor.values, tensor.values[:pad]], 0)
-    return (idx.reshape(num_shards, L, -1), val.reshape(num_shards, L))
-
-
-def make_sync_step(cfg: FastTuckerConfig, mesh: Mesh, axis: str = "data",
-                   compress: bool = False):
-    """Returns jit'd step(state, key, idx_shards, val_shards) — ``sync``."""
-
-    def local_step(params, step_no, key, idx_shard, val_shard, ef):
-        # shard_map blocks keep a size-1 leading dim — drop it
-        idx_shard = idx_shard[0]
-        val_shard = val_shard[0]
-        me = jax.lax.axis_index(axis)
-        key = jax.random.fold_in(key, me)
-        idx, val = sample_batch_arrays(
-            key, idx_shard, val_shard, cfg.batch_size)
-        grads = batch_gradients(
-            params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            backend=cfg.backend,
-        )
-        dense = scatter_row_grads(params.factors, idx, grads.row_grads,
-                                  backend=cfg.backend)
-        if compress:
-            new_ef = []
-            summed = []
-            for g, e in zip(dense, ef):
-                q, scale, new_e = compress_ef(g, e)
-                deq = decompress(q, scale)
-                summed.append(jax.lax.psum(deq, axis))
-                new_ef.append(new_e)
-            dense = tuple(summed)
-            ef = tuple(new_ef)
-        else:
-            dense = jax.lax.psum(dense, axis)
-        core = jax.lax.psum(grads.core_grads, axis)
-        nshards = jax.lax.psum(1, axis)
-        lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, step_no)
-        lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, step_no)
-        factors = tuple(
-            f - (lr_a / nshards) * g for f, g in zip(params.factors, dense))
-        core_f = tuple(
-            b - (lr_b / nshards) * g
-            for b, g in zip(params.core_factors, core))
-        return FastTuckerParams(factors, core_f), ef
-
-    from jax.experimental.shard_map import shard_map
-
-    sharded = shard_map(
-        local_step,
-        mesh=mesh,
-        in_specs=(P(), P(), P(), P(axis), P(axis), P()),
-        out_specs=(P(), P()),
-        check_rep=False,
-    )
-    return jax.jit(sharded)
-
-
-def init_error_feedback(params: FastTuckerParams):
-    return tuple(jnp.zeros_like(f) for f in params.factors)
-
-
-# ---------------------------------------------------------------------------
-# strata mode (faithful Fig. 2)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class StrataPlan:
-    """Host-side prep for the stratified schedule."""
-    buckets: dict          # from partition_for_workers
-    rows_per_block: tuple  # per mode (padded row count / M)
-    num_workers: int
-
-    @classmethod
-    def build(cls, tensor: SparseTensor, num_workers: int):
-        M = num_workers
-        padded_dims = tuple(-(-d // M) * M for d in tensor.dims)
-        padded = SparseTensor(tensor.indices, tensor.values, padded_dims)
-        buckets = partition_for_workers(padded, M)
-        return cls(buckets, tuple(d // M for d in padded_dims), M)
-
-    def stratum_digits(self, s: int) -> np.ndarray:
-        """Base-M digits (mode 1..N-1 shifts) of stratum s."""
-        N = self.buckets["indices"].shape[-1]
-        out = np.zeros(N, dtype=np.int64)
-        rem = s
-        for n in range(1, N):
-            out[n] = rem % self.num_workers
-            rem //= self.num_workers
-        return out
-
-
-def pad_factors_for_strata(params: FastTuckerParams, plan: StrataPlan
-                           ) -> FastTuckerParams:
-    M = plan.num_workers
-    factors = tuple(
-        jnp.pad(f, ((0, plan.rows_per_block[n] * M - f.shape[0]), (0, 0)))
-        for n, f in enumerate(params.factors)
-    )
-    return FastTuckerParams(factors, params.core_factors)
-
-
-def make_strata_step(cfg: FastTuckerConfig, mesh: Mesh, plan: StrataPlan,
-                     axis: str = "data"):
-    """Step over ONE stratum: rotate shards in, local conflict-free update,
-    rotate back. Factor rows sharded over `axis`; B^(n) replicated."""
-    M = plan.num_workers
-    N = cfg.order
-
-    from jax.experimental.shard_map import shard_map
-
-    # The stratum is host-chosen per step, so specialize the compiled step
-    # per digit tuple: rotations become STATIC ppermutes (no lax.switch over
-    # collectives, which deadlocks/blows up compile). At most M^(N-1)
-    # variants exist; the jit cache holds the ones actually visited.
-    @functools.lru_cache(maxsize=None)
-    def _specialized(digits: tuple):
-        def local_step(params, step_no, key, idx_b, val_b, mask_b):
-            # params.factors[n]: (rows_per_block, J) local shard
-            idx_b, val_b, mask_b = idx_b[0], val_b[0], mask_b[0]
-            me = jax.lax.axis_index(axis)
-
-            def rotate(f, shift, inverse=False):
-                # want the shard owned by (me + shift): send mine to
-                # (me − shift), then everyone holds the (me + shift) shard.
-                if shift % M == 0:
-                    return f
-                sgn = 1 if inverse else -1
-                perm = [(i, (i + sgn * shift) % M) for i in range(M)]
-                return jax.lax.ppermute(f, axis, perm)
-
-            rot = [rotate(params.factors[n], digits[n]) for n in range(N)]
-
-            key = jax.random.fold_in(key, me)
-            pick = jax.random.randint(key, (cfg.batch_size,), 0,
-                                      idx_b.shape[0])
-            idx = idx_b[pick]
-            val = val_b[pick]
-            msk = mask_b[pick]
-
-            # localize rows: mode-n block digit here is (me + digits[n]) % M
-            local_idx = []
-            for n in range(N):
-                digit = (me + digits[n]) % M
-                local_idx.append(idx[:, n] - digit * plan.rows_per_block[n])
-            lidx = jnp.stack(local_idx, axis=1)
-
-            lparams = FastTuckerParams(tuple(rot), params.core_factors)
-            grads = batch_gradients(
-                lparams, lidx, val, cfg.lambda_a, cfg.lambda_b, mask=msk,
-                backend=cfg.backend,
-            )
-            dense = scatter_row_grads(lparams.factors, lidx, grads.row_grads,
-                                      backend=cfg.backend)
-            lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, step_no)
-            lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, step_no)
-            new_rot = tuple(f - lr_a * g for f, g in zip(rot, dense))
-
-            # core factors: psum'd gradient, applied identically everywhere
-            core = jax.lax.psum(grads.core_grads, axis)
-            core_f = tuple(
-                b - (lr_b / M) * g for b, g in zip(params.core_factors, core))
-
-            back = tuple(
-                rotate(new_rot[n], digits[n], inverse=True) for n in range(N)
-            )
-            return FastTuckerParams(back, core_f)
-
-        sharded = shard_map(
-            local_step,
-            mesh=mesh,
-            in_specs=(
-                FastTuckerParams(
-                    tuple(P(axis, None) for _ in range(N)),
-                    tuple(P() for _ in range(N)),
-                ),
-                P(), P(),
-                P(axis), P(axis), P(axis),
-            ),
-            out_specs=FastTuckerParams(
-                tuple(P(axis, None) for _ in range(N)),
-                tuple(P() for _ in range(N)),
-            ),
-            check_rep=False,
-        )
-        return jax.jit(sharded)
-
-    def step(params, step_no, key, stratum: int):
-        digits = tuple(int(d) for d in plan.stratum_digits(int(stratum)))
-        b = plan.buckets
-        idx_s = b["indices"][stratum]     # (M, L, N)
-        val_s = b["values"][stratum]
-        msk_s = b["mask"][stratum]
-        return _specialized(digits)(params, step_no, key, idx_s, val_s,
-                                    msk_s)
-
-    return step
+__all__ = [
+    "shard_nonzeros",
+    "make_sync_step",
+    "init_error_feedback",
+    "StrataPlan",
+    "pad_factors_for_strata",
+    "make_strata_step",
+]

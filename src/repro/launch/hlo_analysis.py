@@ -146,7 +146,8 @@ class HloModule:
         if len(op) < 2:
             return []
         args = op[1]
-        depth = 1
+        depth = 1       # parens — ends the operand list
+        nest = 0        # brackets/braces inside shape literals like f32[8,2]{1,0}
         out = []
         cur = []
         for ch in args:
@@ -156,14 +157,25 @@ class HloModule:
                 depth -= 1
                 if depth == 0:
                     break
-            if ch == "," and depth == 1:
+            elif ch in "[{":
+                nest += 1
+            elif ch in "]}":
+                nest -= 1
+            if ch == "," and depth == 1 and nest == 0:
                 out.append("".join(cur))
                 cur = []
             else:
                 cur.append(ch)
         out.append("".join(cur))
-        return [re.sub(r"^\s*%?", "", a.strip()).split(" ")[0] for a in out
-                if a.strip()]
+        names = []
+        for a in out:
+            a = a.strip()
+            if not a:
+                continue
+            # operands print as "f32[8,2]{1,0} %name" or bare "%name"
+            m = re.search(r"%([\w\.\-]+)", a)
+            names.append(m.group(1) if m else a.split(" ")[-1])
+        return names
 
     def _type_of(self, comp: str, name: str) -> str:
         rhs = self.result_types.get(comp, {}).get(name, "")
@@ -397,3 +409,87 @@ class HloModule:
 
 def analyze(hlo_text: str) -> dict:
     return HloModule(hlo_text).entry_cost().as_dict()
+
+
+# ---------------------------------------------------------------------------
+# communication/compute overlap evidence
+# ---------------------------------------------------------------------------
+
+def overlap_stats(hlo_text: str) -> dict:
+    """Structural evidence that collectives overlap compute.
+
+    Two signals, summed over every computation:
+
+      * ``async_collective_starts`` — count of ``collective-permute-start``
+        ops (XLA has split the ROTATION into start/done and may schedule
+        compute in between; the definitive form on TPU). Deliberately
+        excludes other ``*-start`` collectives: an async all-reduce from
+        the core-gradient psum says nothing about rotation hiding.
+      * ``hidden_flops`` — for each collective-permute (or its ``-start``)
+        whose result IS consumed later in the same computation, the dot
+        flops (incl. inside fusions) of instructions between the permute's
+        program point and that first use. Those ops have no data dependence
+        on the in-flight shards, so the scheduler is free to run them
+        concurrently with the transfer: the communication-hiding window the
+        program exposes. Permutes whose result only escapes via the ROOT
+        (e.g. a trailing rotate-home) are tallied as ``tail_permutes`` —
+        also hideable, but their window is unbounded so counting its flops
+        would just measure program length.
+
+    A step that rotates shards in right before the compute that needs them
+    shows ``hidden_flops ≈ 0``; the double-buffered ``strata_overlap`` step
+    issues each rotation a full core-update + next-stratum sample/gather
+    ahead of the consumer, so its in-flight windows carry real flops.
+    """
+    mod = HloModule(hlo_text)
+    async_starts = 0
+    permutes = 0
+    tail_permutes = 0
+    hidden = 0.0
+
+    def _instr_flops(comp: str, rhs: str, op: str) -> float:
+        if op == "dot":
+            return mod._dot_flops(comp, rhs)
+        if op == "fusion":
+            cm = re.search(r"calls=%([\w\.\-]+)", rhs)
+            return mod.cost(cm.group(1)).flops if cm else 0.0
+        return 0.0
+
+    for comp, lines in mod.computations.items():
+        parsed = []
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rhs = im.group(2)
+            om = re.search(r"\s([a-z][\w\-]*)\(", rhs)
+            parsed.append((im.group(1), rhs, om.group(1) if om else "",
+                           line.lstrip().startswith("ROOT")))
+        for i, (name, rhs, op, _) in enumerate(parsed):
+            base = op[:-6] if op.endswith("-start") else op
+            if base != "collective-permute":
+                continue
+            if op.endswith("-start"):
+                async_starts += 1
+            permutes += 1
+            use_re = re.compile(r"%" + re.escape(name) + r"(?![\w\.\-])")
+            window = 0.0
+            consumed = False
+            for _, rhs2, op2, root2 in parsed[i + 1:]:
+                if use_re.search(rhs2):
+                    # the ROOT output tuple is an aggregator, not a real
+                    # consumer — a permute that only escapes through it has
+                    # an unbounded window (tail), not a measured one
+                    consumed = not (root2 and op2 == "tuple")
+                    break
+                window += _instr_flops(comp, rhs2, op2)
+            if consumed:
+                hidden += window
+            else:
+                tail_permutes += 1
+    return {
+        "async_collective_starts": async_starts,
+        "collective_permutes": permutes,
+        "tail_permutes": tail_permutes,
+        "hidden_flops": hidden,
+    }

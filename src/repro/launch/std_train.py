@@ -1,43 +1,54 @@
 """STD (sparse Tucker) training driver — the paper's own workload.
 
-Modes: ``local`` single-device, ``sync`` data-parallel minibatch (+optional
-int8 error-feedback compression), ``strata`` faithful Fig.-2 stratified
-rotation.  ``--backend`` selects the kernel backend from
-``repro.kernels.dispatch`` (``xla`` reference jnp, ``pallas`` compiled,
-``pallas_interpret`` CPU-testable kernels; default resolves
-``$REPRO_KERNEL_BACKEND`` then ``xla``). Example:
+ONE strategy-agnostic loop: ``--strategy`` selects from the distributed
+registry (``repro.distributed``):
 
-    PYTHONPATH=src python -m repro.launch.std_train --mode sync \
+    ``local``           single device
+    ``sync``            data-parallel minibatch, psum'd gradients
+    ``strata``          faithful Fig.-2 stratified rotation (LHC schedule)
+    ``strata_overlap``  fused strata chunks with communication-hidden
+                        rotations
+
+``--compress`` (int8 error-feedback gradient compression) and
+``--ckpt-dir`` (uniform save/restore, ``--resume`` to continue) work under
+every strategy. ``--mode`` is a deprecated alias for ``--strategy``;
+``--backend`` selects the kernel backend from ``repro.kernels.dispatch``
+(``xla`` reference jnp, ``pallas`` compiled, ``pallas_interpret``
+CPU-testable kernels; default resolves ``$REPRO_KERNEL_BACKEND`` then
+``xla``). Example:
+
+    PYTHONPATH=src python -m repro.launch.std_train --strategy strata_overlap \
         --dims 2000,1500,1000 --nnz 500000 --steps 300 --rank 8 \
         --core-rank 8 --backend pallas_interpret
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import logging
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core import (
-    FastTuckerConfig, SparseTensor, init_state, rmse_mae, sgd_step,
-)
+from repro.core import FastTuckerConfig, init_state, rmse_mae
 from repro.core import fasttucker as ft
 from repro.data.synthetic import planted_tensor
-from repro.distributed import strategy
+from repro.distributed import available_strategies, get_strategy
 from repro.launch.mesh import make_host_mesh
-from repro.runtime.fault import Supervisor, SupervisorConfig
 
 log = logging.getLogger("repro.std")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="local",
-                    choices=["local", "sync", "strata"])
+    ap.add_argument("--strategy", default=None,
+                    help="distributed strategy: "
+                         "local | sync | strata | strata_overlap "
+                         "(default: $REPRO_DIST_STRATEGY or local)")
+    ap.add_argument("--mode", default=None,
+                    choices=["local", "sync", "strata"],
+                    help="DEPRECATED: alias for --strategy")
     ap.add_argument("--dims", default="1000,800,600")
     ap.add_argument("--nnz", type=int, default=200_000)
     ap.add_argument("--rank", type=int, default=8)
@@ -45,7 +56,11 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--eval-every", type=int, default=50)
-    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression "
+                         "(any strategy)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="data/schedule/init seed")
     ap.add_argument("--backend", default=None,
                     help="kernel backend: xla | pallas | pallas_interpret "
                          "(default: $REPRO_KERNEL_BACKEND or xla)")
@@ -53,6 +68,11 @@ def main() -> None:
                     help="DEPRECATED: alias for --backend "
                          "pallas/pallas_interpret")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in --ckpt-dir "
+                         "(the dir must belong to a run with the same "
+                         "config/strategy — the manager keeps only the "
+                         "highest-numbered steps)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -64,71 +84,56 @@ def main() -> None:
     backend = dispatch.resolve_backend_name(backend)
     dispatch.get_backend(backend)  # fail fast on typos, before data gen
 
+    # fail fast on strategy typos too (--mode maps through with a warning)
+    strategy = get_strategy(args.strategy, mode=args.mode)
+    log.info("strategy: %s (available: %s), kernel backend: %s",
+             strategy.name, "/".join(available_strategies()), backend)
+
     dims = tuple(int(x) for x in args.dims.split(","))
     tensor = planted_tensor(dims, args.nnz, rank=args.rank,
-                            core_rank=args.core_rank, noise=0.05)
+                            core_rank=args.core_rank, noise=0.05,
+                            seed=args.seed)
     train_t, test_t = tensor.split(0.1)
     cfg = FastTuckerConfig(
         dims=dims, ranks=(args.rank,) * len(dims),
         core_rank=args.core_rank, batch_size=args.batch,
         backend=backend,
     )
-    log.info("kernel backend: %s", backend)
-    key = jax.random.PRNGKey(0)
-    state = init_state(key, cfg)
 
-    ckpt = None
-    if args.ckpt_dir:
-        ckpt = CheckpointManager(args.ckpt_dir)
+    mesh = make_host_mesh() if strategy.needs_mesh else None
+    plan = strategy.prepare(train_t, cfg, mesh, compress=args.compress,
+                            seed=args.seed)
 
+    key = jax.random.PRNGKey(args.seed)
+    key, init_key, loop_key = jax.random.split(key, 3)
+    dstate = strategy.init(plan, init_state(init_key, cfg), loop_key)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        dstate = strategy.restore(plan, ckpt, dstate)
+        log.info("resumed from step %d", int(dstate.step))
+        if int(dstate.step) >= args.steps:
+            log.warning(
+                "checkpoint step %d >= --steps %d: nothing to train — "
+                "is %s a stale dir from another run?",
+                int(dstate.step), args.steps, args.ckpt_dir)
+
+    step_fn = strategy.make_step(plan)
     t0 = time.time()
-    if args.mode == "local":
-        for i in range(args.steps):
-            key, sub = jax.random.split(key)
-            state = sgd_step(state, sub, train_t.indices, train_t.values,
-                             cfg)
-            if (i + 1) % args.eval_every == 0:
-                r, m = rmse_mae(state.params, test_t, ft.predict)
-                log.info("step %d rmse %.4f mae %.4f", i + 1, r, m)
+    last_eval = int(dstate.step)
+    with (mesh if mesh is not None else contextlib.nullcontext()):
+        while int(dstate.step) < args.steps:
+            dstate = step_fn(dstate)
+            i = int(dstate.step)
+            if i // args.eval_every > last_eval // args.eval_every \
+                    or i >= args.steps:
+                last_eval = i
+                params = strategy.eval_params(plan, dstate)
+                r, m = rmse_mae(params, test_t, ft.predict)
+                log.info("step %d rmse %.4f mae %.4f", i, r, m)
                 if ckpt:
-                    ckpt.save(i + 1, state)
-    elif args.mode == "sync":
-        mesh = make_host_mesh()
-        n_dev = mesh.devices.size
-        idx_sh, val_sh = strategy.shard_nonzeros(train_t, n_dev)
-        step = strategy.make_sync_step(cfg, mesh, compress=args.compress)
-        ef = strategy.init_error_feedback(state.params)
-        params = state.params
-        with mesh:
-            for i in range(args.steps):
-                key, sub = jax.random.split(key)
-                params, ef = step(params, jnp.asarray(i), sub, idx_sh,
-                                  val_sh, ef)
-                if (i + 1) % args.eval_every == 0:
-                    r, m = rmse_mae(params, test_t, ft.predict)
-                    log.info("step %d rmse %.4f mae %.4f", i + 1, r, m)
-    else:  # strata
-        mesh = make_host_mesh()
-        n_dev = mesh.devices.size
-        plan = strategy.StrataPlan.build(train_t, n_dev)
-        params = strategy.pad_factors_for_strata(state.params, plan)
-        step = strategy.make_strata_step(cfg, mesh, plan)
-        n_strata = plan.buckets["indices"].shape[0]
-        rng = np.random.default_rng(0)
-        with mesh:
-            for i in range(args.steps):
-                key, sub = jax.random.split(key)
-                s = int(rng.integers(n_strata))
-                params = step(params, jnp.asarray(i), sub, s)
-                if (i + 1) % args.eval_every == 0:
-                    trimmed = ft.FastTuckerParams(
-                        tuple(f[: dims[n]]
-                              for n, f in enumerate(params.factors)),
-                        params.core_factors,
-                    )
-                    r, m = rmse_mae(trimmed, test_t, ft.predict)
-                    log.info("step %d rmse %.4f mae %.4f", i + 1, r, m)
-    log.info("%s done in %.1fs", args.mode, time.time() - t0)
+                    strategy.save(plan, ckpt, dstate)
+    log.info("%s done in %.1fs", strategy.name, time.time() - t0)
 
 
 if __name__ == "__main__":

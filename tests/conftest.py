@@ -5,4 +5,12 @@ import sys
 # keep any accidental inherited flag from leaking in
 os.environ.pop("XLA_FLAGS", None)
 
+# ... unless the multi-device CI tier asks for fake host devices: the
+# in-process strategy tests then run on an actual N-device mesh
+_force = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _force:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_force}"
+    )
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,256 @@
+"""Distributed-strategy registry: interface, schedule, parity, checkpoints."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+from repro.core import FastTuckerConfig, init_state, rmse_mae
+from repro.core import fasttucker as ft
+from repro.core.sampling import latin_hypercube_schedule, stratum_digits
+from repro.data.synthetic import planted_tensor
+from repro.distributed import (
+    available_strategies, get_strategy, resolve_strategy_name,
+)
+from repro.distributed.sync import shard_nonzeros
+from repro.launch.mesh import make_host_mesh
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_strategies():
+    names = available_strategies()
+    for want in ("local", "sync", "strata", "strata_overlap"):
+        assert want in names
+    assert get_strategy("strata").name == "strata"
+
+
+def test_unknown_strategy_lists_available():
+    with pytest.raises(KeyError, match="strata_overlap"):
+        get_strategy("nope")
+
+
+def test_deprecated_mode_resolution_warns():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert resolve_strategy_name(None, mode="strata") == "strata"
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    # explicit --strategy wins silently
+    assert resolve_strategy_name("sync", mode="strata") == "sync"
+    assert resolve_strategy_name(None, mode=None) == "local"
+
+
+# ---------------------------------------------------------------------------
+# shard_nonzeros padding (regression: nnz < num_shards)
+# ---------------------------------------------------------------------------
+
+def test_shard_nonzeros_tiles_when_nnz_below_shards():
+    t = planted_tensor((8, 6, 5), 3, seed=0)
+    idx, val = shard_nonzeros(t, 4)
+    assert idx.shape == (4, 1, 3) and val.shape == (4, 1)
+    # padding tiles Ω: shard s holds nonzero s mod nnz
+    np.testing.assert_array_equal(np.asarray(idx[3, 0]),
+                                  np.asarray(t.indices[0]))
+    assert float(val[3, 0]) == float(t.values[0])
+
+
+def test_shard_nonzeros_matches_old_layout_when_pad_small():
+    t = planted_tensor((20, 16, 12), 10, seed=1)
+    idx, val = shard_nonzeros(t, 4)  # L=3, pad=2 < nnz
+    assert idx.shape == (4, 3, 3)
+    flat = np.asarray(idx).reshape(12, 3)
+    np.testing.assert_array_equal(flat[:10], np.asarray(t.indices))
+    np.testing.assert_array_equal(flat[10:], np.asarray(t.indices[:2]))
+
+
+# ---------------------------------------------------------------------------
+# Latin-hypercube epoch schedule
+# ---------------------------------------------------------------------------
+
+def test_lhc_schedule_covers_every_stratum_once():
+    M, N = 4, 3
+    ids = np.asarray(latin_hypercube_schedule(jax.random.PRNGKey(3), M, N))
+    assert sorted(ids.tolist()) == list(range(M ** (N - 1)))
+
+
+def test_stratum_digits_invert_to_ids():
+    M, N = 3, 4
+    S = M ** (N - 1)
+    ids = jnp.arange(S)
+    d = np.asarray(stratum_digits(ids, M, N))
+    assert (d[:, 0] == 0).all()
+    recon = sum(d[:, n] * M ** (n - 1) for n in range(1, N))
+    np.testing.assert_array_equal(recon, np.arange(S))
+
+
+def test_block_partition_epoch_schedule_matches_digit_convention():
+    from repro.core.sptensor import BlockPartition
+
+    bp = BlockPartition((12, 10, 8), 4)
+    sched = bp.epoch_schedule(0)
+    assert sorted(sched.tolist()) == list(range(16))
+
+
+# ---------------------------------------------------------------------------
+# uniform interface on one device (fast): step/eval/checkpoint/compress
+# ---------------------------------------------------------------------------
+
+def _tiny_problem():
+    dims = (18, 15, 12)
+    t = planted_tensor(dims, 2500, noise=0.05, seed=0)
+    cfg = FastTuckerConfig(dims=dims, ranks=(3,) * 3, core_rank=3,
+                           batch_size=128)
+    return t, cfg
+
+
+@pytest.mark.parametrize("name", ["local", "sync", "strata",
+                                  "strata_overlap"])
+@pytest.mark.parametrize("compress", [False, True])
+def test_strategy_runs_and_checkpoints_single_device(
+        tmp_path, name, compress):
+    from repro.checkpoint.manager import CheckpointManager
+
+    t, cfg = _tiny_problem()
+    st = get_strategy(name)
+    mesh = make_host_mesh() if st.needs_mesh else None
+    plan = st.prepare(t, cfg, mesh, compress=compress, seed=0)
+    ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                 jax.random.PRNGKey(1))
+    step = st.make_step(plan)
+
+    import contextlib
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        while int(ds.step) < 6:
+            ds = step(ds)
+        ckpt = CheckpointManager(tmp_path / name)
+        st.save(plan, ckpt, ds)
+        # keep training the original to steps=10
+        ds_cont = ds
+        while int(ds_cont.step) < 10:
+            ds_cont = step(ds_cont)
+        # restore and re-run the same span — must match exactly
+        ds_res = st.restore(plan, ckpt, st.init(
+            plan, init_state(jax.random.PRNGKey(9), cfg),
+            jax.random.PRNGKey(9)))
+        assert int(ds_res.step) == int(ds.step)
+        while int(ds_res.step) < 10:
+            ds_res = step(ds_res)
+    for a, b in zip(jax.tree.leaves(ds_cont.params),
+                    jax.tree.leaves(ds_res.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    # eval_params returns the global (trimmed) layout
+    p = st.eval_params(plan, ds_cont)
+    for n, f in enumerate(p.factors):
+        assert f.shape[0] == cfg.dims[n]
+
+
+def test_eval_params_trims_strata_padding():
+    t, cfg = _tiny_problem()  # dims not divisible by M=1? M=1 → no padding
+    st = get_strategy("strata")
+    mesh = make_host_mesh()
+    plan = st.prepare(t, cfg, mesh, seed=0)
+    ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                 jax.random.PRNGKey(1))
+    padded = ds.params.factors
+    trimmed = st.eval_params(plan, ds).factors
+    for n in range(len(cfg.dims)):
+        assert padded[n].shape[0] >= trimmed[n].shape[0] == cfg.dims[n]
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_strategy_parity_four_devices():
+    """sync/strata/strata_overlap land in the same RMSE ballpark as local;
+    strata_overlap reproduces strata's trajectory under a fixed schedule."""
+    run_with_devices("""
+        import jax, numpy as np
+        from repro.core import FastTuckerConfig, init_state, rmse_mae
+        from repro.core import fasttucker as ft
+        from repro.data.synthetic import planted_tensor
+        from repro.distributed import get_strategy
+        from repro.launch.mesh import make_host_mesh
+
+        dims = (60, 48, 36)
+        t = planted_tensor(dims, 20000, noise=0.05, seed=1)
+        train_t, test_t = t.split(0.1)
+        cfg = FastTuckerConfig(dims=dims, ranks=(4,)*3, core_rank=4,
+                               batch_size=256)
+        mesh = make_host_mesh()
+        assert mesh.devices.size == 4
+
+        def run(name, steps=48):
+            st = get_strategy(name)
+            plan = st.prepare(train_t, cfg,
+                              mesh if st.needs_mesh else None, seed=0)
+            ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                         jax.random.PRNGKey(7))
+            step = st.make_step(plan)
+            with mesh:
+                while int(ds.step) < steps:
+                    ds = step(ds)
+            p = st.eval_params(plan, ds)
+            r, _ = rmse_mae(p, test_t, ft.predict)
+            return p, float(r)
+
+        p_loc, r_loc = run("local")
+        p_syn, r_syn = run("sync")
+        p_str, r_str = run("strata")
+        p_ovl, r_ovl = run("strata_overlap")
+        print("rmse", r_loc, r_syn, r_str, r_ovl)
+        # same ballpark as the single-device reference
+        for r in (r_syn, r_str, r_ovl):
+            assert r < max(2.5 * r_loc, 0.35), (r, r_loc)
+        # fixed schedule → identical trajectories
+        for a, b in zip(p_str.factors + p_str.core_factors,
+                        p_ovl.factors + p_ovl.core_factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+        print("parity ok")
+    """, num_devices=4, timeout=1500)
+
+
+@pytest.mark.slow
+def test_overlap_step_hides_rotations_four_devices():
+    """Compiled strata_overlap chunk: ≤ strata collective bytes per step,
+    and each rotation is issued ahead of compute that doesn't need it."""
+    run_with_devices("""
+        import jax
+        from repro.core import FastTuckerConfig, init_state
+        from repro.data.synthetic import planted_tensor
+        from repro.distributed import get_strategy
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.hlo_analysis import analyze, overlap_stats
+
+        dims = (64, 48, 32)
+        t = planted_tensor(dims, 10000, seed=0)
+        cfg = FastTuckerConfig(dims=dims, ranks=(4,)*3, core_rank=4,
+                               batch_size=256)
+        mesh = make_host_mesh()
+        stats = {}
+        for name in ("strata", "strata_overlap"):
+            st = get_strategy(name)
+            plan = st.prepare(t, cfg, mesh, seed=0)
+            ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                         jax.random.PRNGKey(1))
+            with mesh:
+                comp = st.lower_step(plan, ds).compile()
+            txt = comp.as_text()
+            spc = st.steps_per_call(plan)
+            stats[name] = (analyze(txt)["collective_wire_total"] / spc,
+                           overlap_stats(txt))
+        coll_s, _ = stats["strata"]
+        coll_o, o = stats["strata_overlap"]
+        print("coll/step", coll_s, coll_o, o)
+        assert coll_o <= coll_s + 1e-6
+        assert o["hidden_flops"] > 0 or o["async_collective_starts"] > 0
+        print("overlap evidence ok")
+    """, num_devices=4, timeout=1500)
