@@ -102,6 +102,26 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_leaves(self, step: int | None = None
+                    ) -> tuple[dict, list[np.ndarray]]:
+        """Raw (manifest, leaves) of a committed step — no ``like`` tree.
+
+        Readers that don't share the writer's pytree classes (e.g. the
+        serving engine loading factors out of a ``DistState`` checkpoint)
+        identify leaves by shape/position from the manifest instead.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves = [
+            np.load(d / f"leaf_{i:06d}.npy")
+            for i in range(manifest["num_leaves"])
+        ]
+        return manifest, leaves
+
     def restore(self, like: Any, step: int | None = None,
                 shardings: Any = None) -> tuple[Any, int]:
         """Load into the structure of ``like``; re-place per ``shardings``

@@ -72,6 +72,39 @@ def predict_from_rows(
     return jnp.sum(full, axis=-1)
 
 
+def mode_products(
+    factors: Sequence[jax.Array], core_factors: Sequence[jax.Array]
+) -> tuple[jax.Array, ...]:
+    """C^(n) = A^(n) B^(n) ∈ R^{I_n × R} — ALL mode dots, precomputed.
+
+    ``C^(n)[i, r]`` is exactly the Theorem-1 coefficient ``c_r^(n)`` for row
+    ``i``, so ``x̂(i_1..i_N) = Σ_r Π_n C^(n)[i_n, r]`` — the cheap per-query
+    path the serving engine caches (``repro.serve``): one gather + product
+    per query instead of J_n-length dot products.
+    """
+    return tuple(a @ b for a, b in zip(factors, core_factors))
+
+
+def dense_reconstruct(
+    factors: Sequence[jax.Array], core_factors: Sequence[jax.Array]
+) -> jax.Array:
+    """X̂ = Ĝ ×_1 A^(1) … ×_N A^(N) materialized (tiny tensors / tests only).
+
+    The O(Π I_n) oracle the factored serving path is checked against;
+    deliberately routed through the MATERIALIZED core ``kruskal_to_core``
+    (not ``mode_products``) so the test oracle shares no code with the
+    engine's cached path.
+    """
+    G = kruskal_to_core(core_factors)                # (J_1, …, J_N)
+    N = len(factors)
+    core_l = "abcdefghijklmnop"[:N]
+    out_l = "ABCDEFGHIJKLMNOP"[:N]
+    expr = (core_l + ","
+            + ",".join(f"{out_l[n]}{core_l[n]}" for n in range(N))
+            + "->" + out_l)
+    return jnp.einsum(expr, G, *factors)
+
+
 # ---------------------------------------------------------------------------
 # Theorem 1 / Theorem 2 reference forms (used by property tests)
 # ---------------------------------------------------------------------------

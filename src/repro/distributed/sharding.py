@@ -145,6 +145,25 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+# Serving (repro.serve): per-mode Kruskal-product tables C^(n) ∈ (I_n, R)
+# are ROW-sharded over the data axis — the same layout the strata training
+# flavors use for factor shards, so a trained sharded run hands its layout
+# straight to the server.
+RULES_SERVE: dict[str, tuple[str, ...]] = {"serve_rows": ("data",)}
+
+
+def serve_row_sharding(mesh: Mesh, shape: Sequence[int]) -> NamedSharding:
+    """NamedSharding row-sharding a (rows, R) serving table over ``data``.
+
+    Goes through ``spec_for`` so the usual divisibility guard applies —
+    a table whose row count doesn't divide the axis is replicated rather
+    than mis-sharded (the serve engine pads rows to the axis size first,
+    so in practice the shard always binds).
+    """
+    return NamedSharding(
+        mesh, spec_for(("serve_rows", None), shape, mesh, RULES_SERVE))
+
+
 # Cache leaves use positional axis conventions (see launch.steps):
 CACHE_AXES = {
     # attention caches ("head_dim_kv"/"kv_lora" only bind under *_v2 rules)

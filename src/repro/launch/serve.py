@@ -1,4 +1,8 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy decode.
+"""LM-ONLY batched serving driver: prefill a batch of prompts, then greedy
+decode. Drives the language-model configs (``repro.configs``) exclusively —
+it does NOT serve Tucker decompositions. For batched FastTucker inference
+(the paper's workload: predict / reconstruct / top-k from trained factors)
+use ``repro.launch.serve_tucker`` and the ``repro.serve`` engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_14b --reduced \
         --batch 4 --prompt-len 32 --gen 16
@@ -21,7 +25,10 @@ log = logging.getLogger("repro.serve")
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="LM prefill+decode serving (language-model configs "
+                    "only). For batched FastTucker inference use "
+                    "repro.launch.serve_tucker.")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -1,0 +1,41 @@
+"""Batched FastTucker inference (``repro.serve``) — Theorem 1 as a server.
+
+The trained model is the paper's Kruskal-core Tucker form (Eq. 9):
+
+    Ĝ        = Σ_r b_r^(1) ∘ … ∘ b_r^(N)          (core as rank-R Kruskal)
+    X̂        = Ĝ ×_1 A^(1) … ×_N A^(N)
+
+and Theorem 1 factors every entry of X̂ into mode-wise dot products:
+
+    c_r^(n)  = ⟨a_{i_n}, b_{:,r}^(n)⟩
+    x̂(i_1..i_N) = Σ_r Π_n c_r^(n)                 (linear in R·Σ J_n)
+
+At inference the a-rows and B^(n) are both frozen, so the mode dots for
+EVERY row can be cached once as per-mode Kruskal-product tables
+``C^(n) = A^(n) B^(n) ∈ R^{I_n × R}`` — after which any query is a gather
+plus an O(N·R) product-sum, any mode slice is one factored einsum over the
+C^(n), and top-k recommendation is a (B, R)×(R, I) matmul. The dense
+tensor (``Π I_n`` entries) is never materialized; this is exactly the
+cheap per-query path recommenders need (P-Tucker / SGD_Tucker downstream
+use) served from the factors the trainers checkpoint.
+
+Layout:
+
+    ``engine``     ``TuckerServer`` (predict / reconstruct_rows / top_k),
+                   checkpoint loading, kernel-backend routing, sharded mode
+    ``bucketing``  fixed-shape request bucketing for a bounded jit cache
+
+Drivers: ``repro.launch.serve_tucker`` (CLI with a microbatch queue),
+``examples/serve_batched.py`` (train → checkpoint → serve end to end),
+``benchmarks/bench_serve.py`` (batched vs per-query throughput).
+"""
+from .bucketing import bucket_for, bucket_ladder, split_batch
+from .engine import TuckerServer, load_params_from_checkpoint
+
+__all__ = [
+    "TuckerServer",
+    "load_params_from_checkpoint",
+    "bucket_ladder",
+    "bucket_for",
+    "split_batch",
+]

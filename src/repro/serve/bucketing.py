@@ -1,0 +1,64 @@
+"""Fixed-shape request bucketing so jit caches hit under varying batches.
+
+JAX specializes a compiled executable per input shape: serving raw request
+batches of arbitrary size B would compile once per distinct B (unbounded
+cache growth, compile stalls on the request path). Instead every request is
+padded up to a bucket from a small geometric ladder and, when larger than
+the biggest bucket, split into max-bucket chunks plus one bucketed tail —
+so a 1→512 batch-size sweep compiles at most ``len(ladder)`` executables,
+once, and every later request hits the cache.
+
+Padding rows point at index 0 of every mode; the engine slices the padded
+predictions back to the true batch, so pad entries never escape (and cost
+only the bucket's marginal FLOPs — for the Theorem-1 factored path that is
+O(pad · N · R), negligible).
+"""
+from __future__ import annotations
+
+
+DEFAULT_MIN_BUCKET = 8
+DEFAULT_MAX_BUCKET = 2048
+DEFAULT_GROWTH = 2
+
+
+def bucket_ladder(
+    max_bucket: int = DEFAULT_MAX_BUCKET,
+    min_bucket: int = DEFAULT_MIN_BUCKET,
+    growth: int = DEFAULT_GROWTH,
+) -> tuple[int, ...]:
+    """Geometric bucket sizes (min, min·g, …, ≥max) — the jit-cache bound."""
+    if not (min_bucket >= 1 and max_bucket >= min_bucket and growth >= 2):
+        raise ValueError(
+            f"bad ladder spec: min={min_bucket} max={max_bucket} g={growth}")
+    out = [min_bucket]
+    while out[-1] < max_bucket:
+        out.append(out[-1] * growth)
+    return tuple(out)
+
+
+def bucket_for(n: int, ladder: tuple[int, ...]) -> int:
+    """Smallest bucket ≥ n (n must not exceed the ladder top)."""
+    for b in ladder:
+        if n <= b:
+            return b
+    raise ValueError(f"batch {n} exceeds largest bucket {ladder[-1]}; "
+                     "chunk with split_batch first")
+
+
+def split_batch(n: int, ladder: tuple[int, ...]) -> list[tuple[int, int]]:
+    """Cover a batch of n with bucketed chunks: [(start, bucket), ...].
+
+    Full max-bucket chunks followed by one bucketed tail; every chunk's
+    bucket comes from the ladder, so compilation count stays bounded no
+    matter how large n grows.
+    """
+    if n <= 0:
+        raise ValueError(f"empty batch (n={n})")
+    top = ladder[-1]
+    out = []
+    start = 0
+    while n - start > top:
+        out.append((start, top))
+        start += top
+    out.append((start, bucket_for(n - start, ladder)))
+    return out

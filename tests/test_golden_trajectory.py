@@ -1,0 +1,139 @@
+"""Golden-trajectory regression: fixed-seed per-epoch RMSE must not drift.
+
+``tests/golden/trajectories.json`` commits the expected per-epoch RMSE
+sequence for the ``local`` and ``sync`` strategies on a small fixed-seed
+planted tensor. Kernel or strategy refactors that silently shift numerics
+(changed sampling order, reassociated reductions, broken masking, …) move
+these trajectories far outside the tolerance band; benign platform jitter
+(fma/fusion differences between CPUs) stays well inside it.
+
+Each golden run records the device count it was generated at — ``sync``
+trajectories depend on it (per-device sampling), ``local`` does not
+(``devices: null`` = any). Runs whose device count doesn't match the
+current platform are skipped, so the same file serves tier-1 (1 device)
+and the REPRO_FORCE_HOST_DEVICES=4 CI tier.
+
+Regenerate after an INTENTIONAL numerics change (then eyeball the diff!):
+
+    PYTHONPATH=src python tests/test_golden_trajectory.py --regen
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python tests/test_golden_trajectory.py --regen
+"""
+import contextlib
+import json
+from pathlib import Path
+
+import jax
+import pytest
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "trajectories.json"
+
+# tolerance band: |got − want| ≤ ATOL + RTOL·want per epoch
+RTOL = 0.01
+ATOL = 0.002
+
+
+def _golden():
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+def _trajectory(strategy_name: str, meta: dict) -> list[float]:
+    """Per-epoch held-out RMSE for one strategy under the golden config."""
+    from repro.core import FastTuckerConfig, init_state, rmse_mae
+    from repro.core import fasttucker as ft
+    from repro.data.synthetic import planted_tensor
+    from repro.distributed import get_strategy
+    from repro.launch.mesh import make_host_mesh
+
+    dims = tuple(meta["dims"])
+    tensor = planted_tensor(dims, meta["nnz"], noise=meta["noise"],
+                            seed=meta["seed"])
+    train_t, test_t = tensor.split(0.1)
+    cfg = FastTuckerConfig(
+        dims=dims, ranks=(meta["rank"],) * len(dims),
+        core_rank=meta["core_rank"], batch_size=meta["batch"],
+    )
+    st = get_strategy(strategy_name)
+    mesh = make_host_mesh() if st.needs_mesh else None
+    plan = st.prepare(train_t, cfg, mesh, seed=meta["seed"])
+    ds = st.init(plan, init_state(jax.random.PRNGKey(meta["seed"]), cfg),
+                 jax.random.PRNGKey(meta["seed"] + 1))
+    step = st.make_step(plan)
+    out = []
+    with (mesh if mesh is not None else contextlib.nullcontext()):
+        for _ in range(meta["epochs"]):
+            target = int(ds.step) + meta["steps_per_epoch"]
+            while int(ds.step) < target:
+                ds = step(ds)
+            r, _ = rmse_mae(st.eval_params(plan, ds), test_t, ft.predict)
+            out.append(float(r))
+    return out
+
+
+def _runs_for_current_devices():
+    g = _golden()
+    n = len(jax.devices())
+    return [(g["meta"], r) for r in g["runs"]
+            if r["devices"] in (None, n)]
+
+
+def test_golden_file_covers_this_platform():
+    assert _runs_for_current_devices(), (
+        f"no golden runs recorded for {len(jax.devices())} devices — "
+        "regenerate (see module docstring)")
+
+
+@pytest.mark.parametrize("strategy", ["local", "sync"])
+def test_trajectory_matches_golden(strategy):
+    matching = [(m, r) for m, r in _runs_for_current_devices()
+                if r["strategy"] == strategy]
+    if not matching:
+        pytest.skip(f"no {strategy} golden at {len(jax.devices())} devices")
+    meta, run = matching[0]
+    got = _trajectory(strategy, meta)
+    want = run["rmse"]
+    assert len(got) == len(want)
+    for e, (g_, w_) in enumerate(zip(got, want)):
+        assert abs(g_ - w_) <= ATOL + RTOL * w_, (
+            f"{strategy} epoch {e}: rmse {g_:.6f} drifted from golden "
+            f"{w_:.6f} (band ±{ATOL + RTOL * w_:.6f}) — if this numerics "
+            f"change is intentional, regenerate tests/golden/ (module "
+            f"docstring) and review the diff")
+    # the model must actually learn — guards against a golden file frozen
+    # around a broken (non-converging) trainer
+    assert got[-1] < 0.75 * got[0]
+
+
+def _regen() -> None:
+    g = (json.loads(GOLDEN_PATH.read_text()) if GOLDEN_PATH.exists()
+         else {
+             "meta": {
+                 "dims": [18, 15, 12], "nnz": 2500, "noise": 0.05,
+                 "rank": 3, "core_rank": 3, "batch": 128,
+                 "steps_per_epoch": 20, "epochs": 5, "seed": 0,
+             },
+             "runs": [],
+         })
+    n = len(jax.devices())
+    for strategy in ("local", "sync"):
+        devices = None if strategy == "local" else n
+        rmse = [round(x, 6) for x in _trajectory(strategy, g["meta"])]
+        g["runs"] = [r for r in g["runs"]
+                     if not (r["strategy"] == strategy
+                             and r["devices"] == devices)]
+        g["runs"].append(
+            {"strategy": strategy, "devices": devices, "rmse": rmse})
+        print(f"{strategy} (devices={devices}): {rmse}")
+    g["runs"].sort(key=lambda r: (r["strategy"], r["devices"] or 0))
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(g, indent=1) + "\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

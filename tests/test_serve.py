@@ -1,0 +1,386 @@
+"""Serving subsystem (repro.serve): engine parity vs dense reconstruction,
+top-k vs brute force, bucketing invariance, backend parity, the
+checkpoint→serve round trip, and the sharded mode.
+
+The sharded tests build a mesh over whatever devices exist, so under the
+multi-device CI tier (REPRO_FORCE_HOST_DEVICES=4) they exercise real
+4-shard tables + the psum gather; on one device they degenerate to M=1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FastTuckerConfig, init_state
+from repro.core import fasttucker as ft
+from repro.core.kruskal import dense_reconstruct, mode_products
+from repro.data.synthetic import planted_tensor
+from repro.launch.mesh import make_host_mesh
+from repro.serve import (
+    TuckerServer, bucket_for, bucket_ladder, load_params_from_checkpoint,
+    split_batch,
+)
+
+BACKENDS = ("xla", "pallas_interpret")
+DIMS = (7, 6, 5)
+
+
+def _params(dims=DIMS, ranks=(3, 4, 2), core_rank=3, seed=0):
+    cfg = FastTuckerConfig(dims=dims, ranks=ranks, core_rank=core_rank,
+                           batch_size=32)
+    return ft.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _all_indices(dims):
+    grids = np.meshgrid(*[np.arange(d) for d in dims], indexing="ij")
+    return np.stack(grids, -1).reshape(-1, len(dims)).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    params = _params()
+    dense = np.asarray(dense_reconstruct(params.factors,
+                                         params.core_factors))
+    return params, dense, _all_indices(DIMS)
+
+
+# ---------------------------------------------------------------------------
+# predict: parity vs dense einsum, every backend, every entry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_predict_matches_dense_einsum(tiny, backend):
+    params, dense, idx = tiny
+    srv = TuckerServer(params, backend=backend)
+    pred = np.asarray(srv.predict(idx))
+    np.testing.assert_allclose(pred, dense[tuple(idx.T)],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_predict_matches_dense_einsum_order4(backend):
+    dims = (5, 4, 3, 3)
+    params = _params(dims, ranks=(2, 3, 2, 2), core_rank=2, seed=3)
+    dense = np.asarray(dense_reconstruct(params.factors,
+                                         params.core_factors))
+    idx = _all_indices(dims)
+    srv = TuckerServer(params, backend=backend)
+    np.testing.assert_allclose(np.asarray(srv.predict(idx)),
+                               dense[tuple(idx.T)], rtol=1e-5, atol=1e-5)
+
+
+def test_backend_parity_bitwise_workload(tiny):
+    params, _, idx = tiny
+    outs = {
+        b: np.asarray(TuckerServer(params, backend=b).predict(idx))
+        for b in BACKENDS
+    }
+    np.testing.assert_allclose(outs["xla"], outs["pallas_interpret"],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_predict_equals_training_eval_path(tiny):
+    """Serving (cached mode products) ≡ training eval (row dots) — the
+    same Theorem-1 quantity through two different contraction orders."""
+    params, _, idx = tiny
+    srv = TuckerServer(params)
+    ref = np.asarray(ft.predict(params, jnp.asarray(idx)))
+    np.testing.assert_allclose(np.asarray(srv.predict(idx)), ref,
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bucketing: padding invariance + bounded jit cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 7, 64])
+def test_bucketing_invariance(tiny, batch):
+    """Same queries, any batch size / any padding → identical answers."""
+    params, dense, idx = tiny
+    srv = TuckerServer(params)
+    full = np.asarray(srv.predict(idx[:64]))
+    got = np.asarray(srv.predict(idx[:batch]))
+    assert got.shape == (batch,)
+    np.testing.assert_array_equal(got, full[:batch])
+
+
+def test_jit_cache_bounded_over_batch_sweep(tiny):
+    params, dense, idx = tiny
+    srv = TuckerServer(params, max_bucket=64, min_bucket=8)
+    assert srv.ladder == (8, 16, 32, 64)
+    for b in list(range(1, 40)) + [64, 130, 200]:   # 130/200 chunk via 64
+        pred = np.asarray(srv.predict(
+            np.resize(idx, (max(b, 1), len(DIMS)))[:b]))
+        assert pred.shape == (b,)
+    assert srv.predict_cache_size <= len(srv.ladder)
+
+
+def test_chunked_oversize_batch_matches_dense(tiny):
+    params, dense, idx = tiny
+    srv = TuckerServer(params, max_bucket=32)
+    pred = np.asarray(srv.predict(idx))     # 210 queries ≫ max bucket 32
+    np.testing.assert_allclose(pred, dense[tuple(idx.T)],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bucket_ladder_helpers():
+    ladder = bucket_ladder(64, 8)
+    assert ladder == (8, 16, 32, 64)
+    assert bucket_for(1, ladder) == 8 and bucket_for(64, ladder) == 64
+    with pytest.raises(ValueError):
+        bucket_for(65, ladder)
+    assert split_batch(200, ladder) == [(0, 64), (64, 64), (128, 64),
+                                        (192, 8)]
+    with pytest.raises(ValueError):
+        split_batch(0, ladder)
+
+
+def test_predict_rejects_bad_shapes(tiny):
+    params, _, _ = tiny
+    srv = TuckerServer(params)
+    with pytest.raises(ValueError, match=r"\(B, 3\)"):
+        srv.predict(np.zeros((4, 2), np.int32))
+
+
+def test_queries_reject_out_of_range_indices(tiny):
+    """Out-of-range rows would silently answer DIFFERENTLY in sharded
+    (zero-masked) vs unsharded (clamped) gathers — they must raise."""
+    params, _, _ = tiny
+    srv = TuckerServer(params)
+    with pytest.raises(ValueError, match="out of range"):
+        srv.predict(np.array([[0, 0, 5]], np.int32))     # dims[2] == 5
+    with pytest.raises(ValueError, match="out of range"):
+        srv.predict(np.array([[-1, 0, 0]], np.int32))
+    with pytest.raises(ValueError, match="out of range"):
+        srv.top_k(0, [7], k=2)                           # dims[0] == 7
+    with pytest.raises(ValueError, match="out of range"):
+        srv.reconstruct_rows(1, [6])                     # dims[1] == 6
+
+
+def test_empty_queries_return_empty(tiny):
+    """A microbatch front end may flush an empty queue — no crash."""
+    params, _, _ = tiny
+    srv = TuckerServer(params)
+    assert srv.predict(np.zeros((0, 3), np.int32)).shape == (0,)
+    scores, items = srv.top_k(0, [], k=3)
+    assert scores.shape == (0, 3) and items.shape == (0, 3)
+    assert srv.reconstruct_rows(1, []).shape == (0, 7, 5)
+
+
+def test_id_queries_chunk_over_the_ladder(tiny):
+    """top_k/reconstruct id lists longer than the largest bucket chunk
+    through the same ladder as predict (bounded compiles, same answers)."""
+    params, dense, _ = tiny
+    small = TuckerServer(params, max_bucket=8, min_bucket=4)
+    big = TuckerServer(params)
+    ids = [0, 1, 2, 3, 4, 5, 6, 0, 2, 4, 6]              # 11 > max bucket 8
+    s0, i0 = big.top_k(0, ids, k=3)
+    s1, i1 = small.top_k(0, ids, k=3)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-6, atol=1e-6)
+    r0 = np.asarray(big.reconstruct_rows(2, [0, 1, 2, 3, 4] * 2))
+    r1 = np.asarray(small.reconstruct_rows(2, [0, 1, 2, 3, 4] * 2))
+    np.testing.assert_allclose(r1, r0, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# top-k + slice reconstruction vs brute force on the dense tensor
+# ---------------------------------------------------------------------------
+
+def test_top_k_matches_brute_force(tiny):
+    params, dense, _ = tiny
+    srv = TuckerServer(params)
+    ids = [0, 2, 6]
+    scores, items = srv.top_k(0, ids, k=4)          # target mode 1
+    brute = dense.sum(axis=2)                       # marginalize mode 2
+    for b, uid in enumerate(ids):
+        order = np.argsort(-brute[uid])[:4]
+        np.testing.assert_array_equal(np.asarray(items[b]), order)
+        np.testing.assert_allclose(np.asarray(scores[b]), brute[uid][order],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_top_k_explicit_target_mode(tiny):
+    params, dense, _ = tiny
+    srv = TuckerServer(params)
+    scores, items = srv.top_k(2, [1, 3], k=3, target_mode=0)
+    brute = dense.sum(axis=1).T                     # (I_3, I_1)
+    for b, cid in enumerate([1, 3]):
+        order = np.argsort(-brute[cid])[:3]
+        np.testing.assert_array_equal(np.asarray(items[b]), order)
+        np.testing.assert_allclose(np.asarray(scores[b]), brute[cid][order],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_top_k_marginalizes_multiple_modes():
+    dims = (5, 4, 3, 3)
+    params = _params(dims, ranks=(2, 3, 2, 2), core_rank=2, seed=5)
+    dense = np.asarray(dense_reconstruct(params.factors,
+                                         params.core_factors))
+    srv = TuckerServer(params)
+    scores, items = srv.top_k(0, [4], k=2)          # sums modes 2 AND 3
+    brute = dense.sum(axis=(2, 3))
+    order = np.argsort(-brute[4])[:2]
+    np.testing.assert_array_equal(np.asarray(items[0]), order)
+    np.testing.assert_allclose(np.asarray(scores[0]), brute[4][order],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_top_k_validates_args(tiny):
+    params, _, _ = tiny
+    srv = TuckerServer(params)
+    with pytest.raises(ValueError, match="differ"):
+        srv.top_k(1, [0], k=2, target_mode=1)
+    with pytest.raises(ValueError, match="k="):
+        srv.top_k(0, [0], k=99)
+    with pytest.raises(ValueError, match="mode"):
+        srv.top_k(7, [0], k=1)
+
+
+def test_reconstruct_rows_matches_dense_slices(tiny):
+    params, dense, _ = tiny
+    srv = TuckerServer(params)
+    for mode, ids in ((0, [0, 4]), (1, [5]), (2, [0, 1, 2])):
+        got = np.asarray(srv.reconstruct_rows(mode, ids))
+        want = np.moveaxis(dense, mode, 0)[np.asarray(ids)]
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint → serve round trip
+# ---------------------------------------------------------------------------
+
+def _train(tmp_path, compress=False, steps=40):
+    """Train ~2 epochs of the tiny problem and checkpoint the DistState."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.distributed import get_strategy
+
+    dims = (18, 15, 12)
+    tensor = planted_tensor(dims, 2500, noise=0.05, seed=0)
+    cfg = FastTuckerConfig(dims=dims, ranks=(3,) * 3, core_rank=3,
+                           batch_size=128)
+    st = get_strategy("local")
+    plan = st.prepare(tensor, cfg, None, compress=compress, seed=0)
+    ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                 jax.random.PRNGKey(1))
+    step = st.make_step(plan)
+    while int(ds.step) < steps:        # 2500/128 ≈ 20 steps per epoch
+        ds = step(ds)
+    ckpt = CheckpointManager(tmp_path / "ck")
+    st.save(plan, ckpt, ds)
+    return st.eval_params(plan, ds), tensor, dims
+
+
+def test_checkpoint_serve_round_trip(tmp_path):
+    params, tensor, dims = _train(tmp_path)
+    srv = TuckerServer.from_checkpoint(tmp_path / "ck", dims=dims)
+    idx = tensor.indices[:256]
+    in_memory = np.asarray(ft.predict(params, idx))
+    served = np.asarray(srv.predict(np.asarray(idx)))
+    np.testing.assert_allclose(served, in_memory, rtol=1e-6, atol=1e-6)
+
+
+def test_checkpoint_loader_skips_trailing_state(tmp_path):
+    """EF residual leaves (compressed runs) trail step/key — the 2-D-prefix
+    parser must not mistake them for parameters."""
+    params, tensor, dims = _train(tmp_path, compress=True)
+    loaded, step = load_params_from_checkpoint(tmp_path / "ck", dims=dims)
+    assert step == 40
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_loader_trims_padded_rows(tmp_path):
+    """Strata checkpoints pad factor rows to a device multiple; dims= trims
+    back to the trained slice (identical to strategy.eval_params)."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.distributed import get_strategy
+
+    dims = (18, 15, 12)
+    tensor = planted_tensor(dims, 2500, seed=0)
+    cfg = FastTuckerConfig(dims=dims, ranks=(3,) * 3, core_rank=3,
+                           batch_size=128)
+    st = get_strategy("strata")
+    mesh = make_host_mesh()
+    plan = st.prepare(tensor, cfg, mesh, seed=0)
+    ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                 jax.random.PRNGKey(1))
+    step = st.make_step(plan)
+    with mesh:
+        for _ in range(4):
+            ds = step(ds)
+    ckpt = CheckpointManager(tmp_path / "strata")
+    st.save(plan, ckpt, ds)
+    loaded, _ = load_params_from_checkpoint(tmp_path / "strata", dims=dims)
+    want = st.eval_params(plan, ds)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_loader_rejects_non_tucker(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    ckpt = CheckpointManager(tmp_path / "lm")
+    ckpt.save(0, {"w": np.zeros((4, 4), np.float32)})
+    with pytest.raises(ValueError, match="FastTucker"):
+        load_params_from_checkpoint(tmp_path / "lm")
+
+
+# ---------------------------------------------------------------------------
+# sharded mode (real 4-way sharding under REPRO_FORCE_HOST_DEVICES=4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_predict_matches_dense(backend):
+    dims = (18, 15, 12)                    # not divisible by 4 → row padding
+    params = _params(dims, ranks=(3,) * 3, core_rank=3, seed=2)
+    dense = np.asarray(dense_reconstruct(params.factors,
+                                         params.core_factors))
+    idx = _all_indices(dims)[::7]
+    mesh = make_host_mesh()
+    srv = TuckerServer(params, backend=backend, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(srv.predict(idx)),
+                               dense[tuple(idx.T)], rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_queries_match_unsharded():
+    params = _params(dims=(18, 15, 12), ranks=(3,) * 3, core_rank=3, seed=2)
+    idx = _all_indices((18, 15, 12))[::11]
+    mesh = make_host_mesh()
+    plain = TuckerServer(params)
+    sharded = TuckerServer(params, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(sharded.predict(idx)),
+                               np.asarray(plain.predict(idx)),
+                               rtol=1e-6, atol=1e-6)
+    s0, i0 = plain.top_k(0, [3, 9], k=5)
+    s1, i1 = sharded.top_k(0, [3, 9], k=5)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-5)
+    r0 = np.asarray(plain.reconstruct_rows(1, [2]))
+    r1 = np.asarray(sharded.reconstruct_rows(1, [2]))
+    np.testing.assert_allclose(r1, r0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serve params reuse the exact cached mode products
+# ---------------------------------------------------------------------------
+
+def test_mode_products_are_the_cached_tables(tiny):
+    params, _, _ = tiny
+    srv = TuckerServer(params)
+    for c, t in zip(mode_products(params.factors, params.core_factors),
+                    srv._tables):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(t))
+
+
+def test_server_validates_params():
+    params = _params()
+    bad = ft.FastTuckerParams(params.factors,
+                              params.core_factors[:-1])
+    with pytest.raises(ValueError):
+        TuckerServer(bad)
+    with pytest.raises(KeyError):
+        TuckerServer(params, backend="not_a_backend")
