@@ -1,9 +1,54 @@
-"""Benchmark timing helpers."""
+"""Benchmark timing helpers + the BENCH_step.json schema contract."""
 from __future__ import annotations
 
 import time
 
 import jax
+
+BENCH_STEP_SCHEMA = "bench_step/v1"
+
+# every result row must carry exactly these fields
+BENCH_STEP_ROW_FIELDS = {
+    "backend": str,        # kernel backend name (repro.kernels.dispatch)
+    "dtype": str,          # parameter storage dtype
+    "update_order": str,   # jacobi | gauss_seidel
+    "mode": str,           # joint | phase_split | two_phase | two_phase_cached
+    "us_per_step": float,  # median wall time per full training step
+}
+
+
+def validate_bench_step(doc: dict) -> None:
+    """Raise ``ValueError`` unless ``doc`` is a valid BENCH_step document.
+
+    The contract CI's bench-smoke step (and tests) hold the emitted JSON
+    to, so the recorded perf trajectory stays machine-readable across PRs.
+    """
+    if not isinstance(doc, dict):
+        raise ValueError(f"BENCH_step document must be a dict, "
+                         f"got {type(doc).__name__}")
+    if doc.get("schema") != BENCH_STEP_SCHEMA:
+        raise ValueError(f"schema must be {BENCH_STEP_SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    for key in ("config", "results"):
+        if key not in doc:
+            raise ValueError(f"missing top-level key {key!r}")
+    cfg = doc["config"]
+    for key in ("dims", "nnz", "rank", "core_rank", "batch"):
+        if key not in cfg:
+            raise ValueError(f"config missing {key!r}")
+    results = doc["results"]
+    if not isinstance(results, list) or not results:
+        raise ValueError("results must be a non-empty list")
+    for i, row_ in enumerate(results):
+        for field, typ in BENCH_STEP_ROW_FIELDS.items():
+            if field not in row_:
+                raise ValueError(f"results[{i}] missing {field!r}")
+            if not isinstance(row_[field], typ):
+                raise ValueError(
+                    f"results[{i}].{field} must be {typ.__name__}, "
+                    f"got {type(row_[field]).__name__}")
+        if row_["us_per_step"] <= 0:
+            raise ValueError(f"results[{i}].us_per_step must be > 0")
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:

@@ -9,8 +9,10 @@ import argparse
 import sys
 import traceback
 
+# "module" (calls run()) or "module:function" for alternate entry points
 MODULES = {
     "table13": "benchmarks.bench_sota_time",
+    "step_sweep": "benchmarks.bench_sota_time:run_step_sweep",
     "fig5": "benchmarks.bench_param_sweep",
     "fig34": "benchmarks.bench_accuracy",
     "tbl8_12": "benchmarks.bench_kernel_blocks",
@@ -29,11 +31,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for name in names:
-        mod_name = MODULES[name]
+        mod_name, _, attr = MODULES[name].partition(":")
         try:
             import importlib
             mod = importlib.import_module(mod_name)
-            mod.run()
+            getattr(mod, attr or "run")()
         except Exception:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()

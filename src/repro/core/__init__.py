@@ -3,14 +3,18 @@ from .sptensor import SparseTensor, BlockPartition, partition_for_workers
 from .fasttucker import (
     FastTuckerConfig,
     FastTuckerParams,
+    StepIntermediates,
     TrainState,
     batch_gradients,
+    core_phase_step,
     dynamic_lr,
+    factor_phase_step,
     init_params,
     init_state,
     predict,
     sampled_loss,
     sgd_step,
+    step_gradients,
     train,
 )
 from .metrics import rmse_mae
@@ -21,14 +25,18 @@ __all__ = [
     "partition_for_workers",
     "FastTuckerConfig",
     "FastTuckerParams",
+    "StepIntermediates",
     "TrainState",
     "batch_gradients",
+    "core_phase_step",
     "dynamic_lr",
+    "factor_phase_step",
     "init_params",
     "init_state",
     "predict",
     "sampled_loss",
     "sgd_step",
+    "step_gradients",
     "train",
     "rmse_mae",
 ]

@@ -21,6 +21,29 @@ pure-jnp reference path, ``"pallas"`` / ``"pallas_interpret"`` route the
 ENTIRE hot path — contraction, Eq.13/17 gradients, and the factor-row
 scatter — through the fused Pallas kernels, identical numerics.  The old
 ``use_kernel: bool`` switch is kept as a deprecated shim.
+
+Phase-split step (cuFasterTucker's invariant-intermediate caching): the
+update decomposes into a *factor phase* (Eq. 13, B^(n) frozen) and a
+*core phase* (Eq. 17, gathered rows frozen).  Both need the same mode
+products ``c^(n) = a_rows^(n) B^(n)`` — the ``StepIntermediates`` cache
+computes them once in the factor phase and hands them to the core phase
+instead of re-running all N mode dots.  ``FastTuckerConfig(
+phase_split=True)`` routes ``sgd_step`` (and every distributed strategy,
+via ``step_gradients``) through the cached two-phase path; results are
+bitwise identical to the joint step in f32 — only the op schedule
+changes.  ``factor_phase_step`` / ``core_phase_step`` expose the phases
+as separately compiled programs (the paper's two-kernel structure);
+there the cache is a real ≥25 % dot-FLOP saving per step, because XLA
+cannot CSE across program boundaries (and a ``pallas_call`` body is
+opaque to CSE/DCE even within one program — on the Pallas backends the
+gauss_seidel phase-split drops from 3N(N+1) to 4N in-kernel dots).
+
+Mixed precision: ``FastTuckerConfig(dtype="bfloat16",
+accum_dtype="float32")`` stores factors/core factors in bf16 while every
+MXU dot, the residual, and the revisited core-gradient accumulator stay
+in f32 (``preferred_element_type`` end to end); parameter updates are
+applied in f32 and rounded back to the storage dtype.  The f32 default
+is bit-for-bit the original trajectory.
 """
 from __future__ import annotations
 
@@ -74,6 +97,9 @@ class FastTuckerConfig:
     init_scale: float | None = None
     update_order: str = "jacobi"    # "jacobi" | "gauss_seidel"
     backend: str = "xla"            # kernel backend (repro.kernels.dispatch)
+    phase_split: bool = False       # cached two-phase step (StepIntermediates)
+    dtype: str = "float32"          # parameter STORAGE dtype (+"bfloat16")
+    accum_dtype: str = "float32"    # MXU dot / gradient accumulation dtype
     use_kernel: dataclasses.InitVar[bool | None] = None  # DEPRECATED shim
 
     def __post_init__(self, use_kernel: bool | None) -> None:
@@ -86,10 +112,21 @@ class FastTuckerConfig:
             if use_kernel and self.backend == "xla":
                 object.__setattr__(
                     self, "backend", dispatch.default_pallas_backend())
+        if self.dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"dtype must be 'float32' or 'bfloat16', got {self.dtype!r}")
+        if self.accum_dtype != "float32":
+            raise ValueError(
+                "accum_dtype must be 'float32' (bf16 storage still "
+                f"accumulates in f32), got {self.accum_dtype!r}")
 
     @property
     def order(self) -> int:
         return len(self.dims)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
 
 
 def init_params(key: jax.Array, cfg: FastTuckerConfig) -> FastTuckerParams:
@@ -105,14 +142,17 @@ def init_params(key: jax.Array, cfg: FastTuckerConfig) -> FastTuckerParams:
     if scale is None:
         meanJ = sum(cfg.ranks) / N
         scale = float((1.0 / cfg.core_rank) ** (0.5 / N) / jnp.sqrt(meanJ))
+    # draw in f32 regardless of storage dtype (same random stream), then
+    # round down — bf16 params are the rounded f32 initialization
     factors = tuple(
         jax.random.uniform(keys[n], (cfg.dims[n], cfg.ranks[n]), minval=0.0,
-                           maxval=2 * scale)
+                           maxval=2 * scale).astype(cfg.param_dtype)
         for n in range(N)
     )
     core_factors = tuple(
         jax.random.uniform(keys[N + n], (cfg.ranks[n], cfg.core_rank),
-                           minval=0.0, maxval=2 * scale)
+                           minval=0.0, maxval=2 * scale
+                           ).astype(cfg.param_dtype)
         for n in range(N)
     )
     return FastTuckerParams(factors, core_factors)
@@ -134,6 +174,21 @@ def gather_rows(
     return tuple(f[idx[:, n]] for n, f in enumerate(factors))
 
 
+def _predict_from_rows(
+    rows: Sequence[jax.Array],
+    core_factors: Sequence[jax.Array],
+    backend: str,
+) -> jax.Array:
+    """Theorem-1 x̂ from already-gathered rows (shared by predict /
+    sampled_loss so the rows are gathered exactly once)."""
+    if backend == "xla":
+        # natively differentiable; skip the custom_vjp on the reference path
+        pred, _ = dispatch.get_backend("xla").kruskal_contract(
+            rows, core_factors)
+        return pred
+    return dispatch.kruskal_predict(backend, tuple(rows), tuple(core_factors))
+
+
 def predict(
     params: FastTuckerParams, idx: jax.Array, backend: str | None = None
 ) -> jax.Array:
@@ -146,12 +201,7 @@ def predict(
     """
     backend = dispatch.resolve_backend_name(backend)
     rows = gather_rows(params.factors, idx)
-    if backend == "xla":
-        # natively differentiable; skip the custom_vjp on the reference path
-        pred, _ = dispatch.get_backend("xla").kruskal_contract(
-            rows, params.core_factors)
-        return pred
-    return dispatch.kruskal_predict(backend, rows, params.core_factors)
+    return _predict_from_rows(rows, params.core_factors, backend)
 
 
 def sampled_loss(
@@ -171,8 +221,10 @@ def sampled_loss(
     ``row_mean=True``: everything averaged over the batch (minibatch SGD).
     Verified against ``jax.grad`` in tests.
     """
+    backend = dispatch.resolve_backend_name(backend)
+    # gather ONCE: the prediction and the row regularizer share these rows
     rows = gather_rows(params.factors, idx)
-    pred = predict(params, idx, backend=backend)
+    pred = _predict_from_rows(rows, params.core_factors, backend)
     err = pred - val
     B = idx.shape[0]
     red = jnp.mean if row_mean else jnp.sum
@@ -192,6 +244,21 @@ class BatchGrads(NamedTuple):
     pred: jax.Array                    # (B,)
 
 
+class StepIntermediates(NamedTuple):
+    """Invariant intermediates shared by the two phases of one step.
+
+    ``B^(n)`` is frozen during the factor phase and the gathered rows are
+    frozen during the core phase (jacobi semantics), so the mode products
+    ``c^(n)`` — the expensive MXU dots — are identical in both; the
+    factor phase emits them once and the core phase consumes them instead
+    of re-running all N mode dots (cuFasterTucker's caching).
+    """
+    rows: tuple[jax.Array, ...]   # per-mode (B, J_n), storage dtype
+    c: tuple[jax.Array, ...]      # per-mode (B, R) mode products, accum dtype
+    pred: jax.Array               # (B,) accum dtype
+    err: jax.Array                # (B,) masked residual, accum dtype
+
+
 def batch_gradients(
     params: FastTuckerParams,
     idx: jax.Array,
@@ -202,8 +269,9 @@ def batch_gradients(
     use_kernel: bool | None = None,
     row_mean: bool = False,
     backend: str | None = None,
+    accum_dtype=None,
 ) -> BatchGrads:
-    """Fused Eq.13 + Eq.17 gradients for the sampled set.
+    """Fused Eq.13 + Eq.17 gradients for the sampled set (the JOINT pass).
 
     ``mask`` (B,) zeroes contributions of padding entries (distributed path).
     ``row_mean=False`` keeps the paper's per-sample (M=1) row-update
@@ -213,15 +281,114 @@ def batch_gradients(
     ``repro.kernels.dispatch``): on the Pallas flavors the contraction AND
     both gradient stages run inside a single ``pallas_call``
     (``repro.kernels.kruskal_grad``). ``use_kernel`` is a deprecated alias
-    for ``backend=<default pallas flavor>``.
+    for ``backend=<default pallas flavor>``.  See
+    ``factor_phase_gradients`` / ``core_phase_gradients`` for the
+    phase-split flavor with cached intermediates.
     """
     backend = _resolve_backend(backend, use_kernel, "batch_gradients")
     rows = gather_rows(params.factors, idx)
     kg = dispatch.get_backend(backend).kruskal_grad(
         rows, params.core_factors, val,
         mask=mask, lambda_a=lambda_a, lambda_b=lambda_b, row_mean=row_mean,
+        accum_dtype=accum_dtype,
     )
     return BatchGrads(kg.row_grads, kg.core_grads, kg.err, kg.pred)
+
+
+def factor_phase_gradients(
+    params: FastTuckerParams,
+    idx: jax.Array,
+    val: jax.Array,
+    lambda_a: float,
+    lambda_b: float,
+    mask: jax.Array | None = None,
+    row_mean: bool = False,
+    backend: str | None = None,
+    accum_dtype=None,
+) -> tuple[BatchGrads, StepIntermediates]:
+    """Factor phase: Eq.-13 row gradients + the emitted intermediates.
+
+    One fused kernel pass computing the mode products ``c^(n)``, the
+    residual, and the row gradients — the Eq.-17 core stage is skipped
+    entirely (``want_core=False``).  Returns the gradients (with
+    ``core_grads=()``) and the ``StepIntermediates`` the matching
+    ``core_phase_gradients`` call consumes.
+    """
+    backend = dispatch.resolve_backend_name(backend)
+    rows = gather_rows(params.factors, idx)
+    kg = dispatch.get_backend(backend).kruskal_grad(
+        rows, params.core_factors, val,
+        mask=mask, lambda_a=lambda_a, lambda_b=lambda_b, row_mean=row_mean,
+        want_core=False, emit_c=True, accum_dtype=accum_dtype,
+    )
+    inter = StepIntermediates(rows, kg.c, kg.pred, kg.err)
+    return BatchGrads(kg.row_grads, (), kg.err, kg.pred), inter
+
+
+def core_phase_gradients(
+    params: FastTuckerParams,
+    idx: jax.Array,
+    val: jax.Array,
+    lambda_a: float,
+    lambda_b: float,
+    mask: jax.Array | None = None,
+    row_mean: bool = False,
+    backend: str | None = None,
+    accum_dtype=None,
+    intermediates: StepIntermediates | None = None,
+) -> BatchGrads:
+    """Core phase: Eq.-17 core-factor gradients (``row_grads=()``).
+
+    With ``intermediates`` the cached rows and mode products are consumed
+    — no gather and no mode dots, only the N core-gradient dots (this is
+    the ≥25 % per-step dot-FLOP saving of the phase-split pipeline).
+    Without, the phase is self-contained and recomputes both (the
+    uncached baseline the HLO cost test measures against).
+    """
+    backend = dispatch.resolve_backend_name(backend)
+    if intermediates is None:
+        rows = gather_rows(params.factors, idx)
+        c = None
+    else:
+        rows, c = intermediates.rows, intermediates.c
+    kg = dispatch.get_backend(backend).kruskal_grad(
+        rows, params.core_factors, val,
+        mask=mask, lambda_a=lambda_a, lambda_b=lambda_b, row_mean=row_mean,
+        c=c, row_modes=(), want_core=True, accum_dtype=accum_dtype,
+    )
+    return BatchGrads((), kg.core_grads, kg.err, kg.pred)
+
+
+def step_gradients(
+    params: FastTuckerParams,
+    idx: jax.Array,
+    val: jax.Array,
+    cfg: "FastTuckerConfig",
+    mask: jax.Array | None = None,
+) -> BatchGrads:
+    """Config-routed gradients: joint, or the cached two-phase pipeline.
+
+    The single entry point the distributed strategies call, so
+    ``FastTuckerConfig(phase_split=True)`` reaches every strategy without
+    per-strategy plumbing.  Bitwise identical either way (f32) — the
+    phases consume the same ``StepIntermediates`` the joint kernel
+    computes inline.
+    """
+    if not cfg.phase_split:
+        return batch_gradients(
+            params, idx, val, cfg.lambda_a, cfg.lambda_b, mask=mask,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        )
+    fg, inter = factor_phase_gradients(
+        params, idx, val, cfg.lambda_a, cfg.lambda_b, mask=mask,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+    )
+    cg = core_phase_gradients(
+        params, idx, val, cfg.lambda_a, cfg.lambda_b, mask=mask,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        intermediates=inter,
+    )
+    return BatchGrads(fg.row_grads, cg.core_grads, inter.err, inter.pred)
 
 
 def scatter_row_grads(
@@ -255,6 +422,16 @@ def init_state(key: jax.Array, cfg: FastTuckerConfig) -> TrainState:
     return TrainState(init_params(key, cfg), jnp.asarray(0, jnp.int32))
 
 
+def _sgd_update(p: jax.Array, lr: jax.Array, g: jax.Array) -> jax.Array:
+    """p − lr·g applied in the gradient (accum) dtype, stored in p's dtype.
+
+    For f32 params this is exactly the original update (the casts are
+    no-ops); for bf16 storage the arithmetic happens in f32 and only the
+    final write rounds down.
+    """
+    return (p.astype(g.dtype) - lr * g).astype(p.dtype)
+
+
 def _apply_updates(
     params: FastTuckerParams,
     idx: jax.Array,
@@ -270,12 +447,92 @@ def _apply_updates(
     if update_factors:
         dense = scatter_row_grads(factors, idx, grads.row_grads,
                                   backend=backend)
-        factors = tuple(f - lr_a * g for f, g in zip(factors, dense))
+        factors = tuple(
+            _sgd_update(f, lr_a, g) for f, g in zip(factors, dense))
     if update_core:
         core_factors = tuple(
-            b - lr_b * g for b, g in zip(core_factors, grads.core_grads)
+            _sgd_update(b, lr_b, g)
+            for b, g in zip(core_factors, grads.core_grads)
         )
     return FastTuckerParams(factors, core_factors)
+
+
+def _gauss_seidel_joint(params, idx, val, lr_a, lr_b, cfg,
+                        update_factors, update_core):
+    """Original GS: one full joint gradient pass per mode (+ one for the
+    core).  XLA CSE rescues the recomputed mode products on the "xla"
+    backend, but a ``pallas_call`` is opaque — on the Pallas backends
+    every pass really re-runs all 3N in-kernel dots."""
+    bk = dispatch.get_backend(cfg.backend)
+    if update_factors:
+        for n in range(cfg.order):
+            grads = batch_gradients(
+                params, idx, val, cfg.lambda_a, cfg.lambda_b,
+                backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+            )
+            g_n = bk.scatter_accum(
+                grads.row_grads[n], idx[:, n],
+                params.factors[n].shape[0],
+            )
+            new_f = list(params.factors)
+            new_f[n] = _sgd_update(params.factors[n], lr_a, g_n)
+            params = FastTuckerParams(tuple(new_f), params.core_factors)
+    if update_core:
+        grads = batch_gradients(
+            params, idx, val, cfg.lambda_a, cfg.lambda_b,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        )
+        params = _apply_updates(
+            params, idx, grads, lr_a, lr_b,
+            update_factors=False, update_core=True,
+            backend=cfg.backend,
+        )
+    return params
+
+
+def _gauss_seidel_phase_split(params, idx, val, lr_a, lr_b, cfg,
+                              update_factors, update_core):
+    """GS with invariant-intermediate caching (cuFasterTucker):
+
+    Updating mode n leaves every other mode's product c^(k≠n) — and all
+    of B^(n) — untouched, so the cache holds all N mode products and only
+    mode n's entry is refreshed (ONE dot) after its row update.  Per
+    step: N initial dots + per mode (1 Eq.-13 dot + 1 refresh dot) + N
+    Eq.-17 dots = 4N, vs 3N(N+1) in-kernel dots for the joint form on
+    the Pallas backends.  Bitwise identical to the joint GS step."""
+    bk = dispatch.get_backend(cfg.backend)
+    N = cfg.order
+    rows = list(gather_rows(params.factors, idx))
+    c = [bk.mode_dot(rows[n], params.core_factors[n],
+                     accum_dtype=cfg.accum_dtype) for n in range(N)]
+    if update_factors:
+        for n in range(N):
+            kg = bk.kruskal_grad(
+                tuple(rows), params.core_factors, val,
+                lambda_a=cfg.lambda_a, lambda_b=cfg.lambda_b,
+                c=tuple(c), row_modes=(n,), want_core=False,
+                accum_dtype=cfg.accum_dtype,
+            )
+            g_n = bk.scatter_accum(
+                kg.row_grads[0], idx[:, n], params.factors[n].shape[0])
+            new_f = list(params.factors)
+            new_f[n] = _sgd_update(params.factors[n], lr_a, g_n)
+            params = FastTuckerParams(tuple(new_f), params.core_factors)
+            rows[n] = params.factors[n][idx[:, n]]
+            c[n] = bk.mode_dot(rows[n], params.core_factors[n],
+                               accum_dtype=cfg.accum_dtype)
+    if update_core:
+        kg = bk.kruskal_grad(
+            tuple(rows), params.core_factors, val,
+            lambda_a=cfg.lambda_a, lambda_b=cfg.lambda_b,
+            c=tuple(c), row_modes=(), want_core=True,
+            accum_dtype=cfg.accum_dtype,
+        )
+        core_factors = tuple(
+            _sgd_update(b, lr_b, g)
+            for b, g in zip(params.core_factors, kg.core_grads))
+        params = FastTuckerParams(params.factors, core_factors)
+    return params
 
 
 @partial(jax.jit, static_argnames=("cfg", "update_factors", "update_core"))
@@ -291,47 +548,123 @@ def sgd_step(
     """One stochastic step: draw Ψ, factored gradients, dynamic-LR SGD.
 
     ``update_core=False`` reproduces the paper's "Factor"-only curves;
-    both True is "Factor+Core".
+    both True is "Factor+Core".  ``cfg.phase_split`` reroutes through the
+    ``StepIntermediates``-cached two-phase form — bitwise identical in
+    f32, structurally cheaper on the Pallas backends (and under
+    gauss_seidel: 4N vs 3N(N+1) in-kernel dots).
     """
     idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
     lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, state.step)
     lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, state.step)
 
     if cfg.update_order == "gauss_seidel":
+        gs = (_gauss_seidel_phase_split if cfg.phase_split
+              else _gauss_seidel_joint)
+        params = gs(state.params, idx, val, lr_a, lr_b, cfg,
+                    update_factors, update_core)
+    elif cfg.phase_split:
+        # jacobi, phased: factor phase emits the intermediates, the core
+        # phase consumes them (core grads use the PRE-update rows cached
+        # in the intermediates — exactly the joint jacobi semantics)
+        fg, inter = factor_phase_gradients(
+            state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        )
         params = state.params
         if update_factors:
-            for n in range(cfg.order):
-                grads = batch_gradients(
-                    params, idx, val, cfg.lambda_a, cfg.lambda_b,
-                    backend=cfg.backend,
-                )
-                g_n = dispatch.get_backend(cfg.backend).scatter_accum(
-                    grads.row_grads[n], idx[:, n],
-                    params.factors[n].shape[0],
-                )
-                new_f = list(params.factors)
-                new_f[n] = params.factors[n] - lr_a * g_n
-                params = FastTuckerParams(tuple(new_f), params.core_factors)
-        if update_core:
-            grads = batch_gradients(
-                params, idx, val, cfg.lambda_a, cfg.lambda_b,
+            params = _apply_updates(
+                params, idx, fg, lr_a, lr_b,
+                update_factors=True, update_core=False,
                 backend=cfg.backend,
             )
+        if update_core:
+            cg = core_phase_gradients(
+                state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
+                backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+                intermediates=inter,
+            )
             params = _apply_updates(
-                params, idx, grads, lr_a, lr_b,
+                params, idx, cg, lr_a, lr_b,
                 update_factors=False, update_core=True,
                 backend=cfg.backend,
             )
     else:  # jacobi: one fused gradient pass, all variables step together
         grads = batch_gradients(
             state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            backend=cfg.backend,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
         )
         params = _apply_updates(
             state.params, idx, grads, lr_a, lr_b,
             update_factors=update_factors, update_core=update_core,
             backend=cfg.backend,
         )
+    return TrainState(params, state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# separately compiled phase programs (the paper's two-kernel structure)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def factor_phase_step(
+    state: TrainState,
+    key: jax.Array,
+    indices: jax.Array,
+    values: jax.Array,
+    cfg: FastTuckerConfig,
+) -> tuple[TrainState, jax.Array, jax.Array, StepIntermediates]:
+    """Phase 1 as its own compiled program: sample Ψ, update the factor
+    matrices, emit ``StepIntermediates``.
+
+    Returns ``(state', idx, val, intermediates)`` — hand all three to
+    ``core_phase_step`` to finish the step.  The step counter advances in
+    the core phase (one "step" = both phases), so ``state'.step`` is
+    unchanged here and both phases share the same dynamic LR epoch.
+    """
+    idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
+    lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, state.step)
+    fg, inter = factor_phase_gradients(
+        state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+    )
+    params = _apply_updates(
+        state.params, idx, fg, lr_a, jnp.asarray(0.0),
+        update_factors=True, update_core=False, backend=cfg.backend,
+    )
+    return TrainState(params, state.step), idx, val, inter
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def core_phase_step(
+    state: TrainState,
+    idx: jax.Array,
+    val: jax.Array,
+    cfg: FastTuckerConfig,
+    intermediates: StepIntermediates | None = None,
+) -> TrainState:
+    """Phase 2 as its own compiled program: update the core factors.
+
+    With ``intermediates`` (from ``factor_phase_step``) the cached rows
+    and mode products are consumed — the compiled program contains N
+    fewer mode-product dots and no gather than the uncached form, a
+    ≥25 % dot-FLOP reduction over the two-program step (XLA cannot CSE
+    across program boundaries; ``launch.hlo_analysis`` verifies this in
+    tests).  Without, the phase recomputes them from ``state.params`` —
+    note the params must then still be PRE-factor-update to preserve
+    joint jacobi semantics, so the uncached form is only exact when run
+    before (or instead of) the factor phase, or as the deliberate
+    recompute baseline.
+    """
+    lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, state.step)
+    cg = core_phase_gradients(
+        state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        intermediates=intermediates,
+    )
+    params = _apply_updates(
+        state.params, idx, cg, jnp.asarray(0.0), lr_b,
+        update_factors=False, update_core=True, backend=cfg.backend,
+    )
     return TrainState(params, state.step + 1)
 
 

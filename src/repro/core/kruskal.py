@@ -33,14 +33,20 @@ def kruskal_to_core(core_factors: Sequence[jax.Array]) -> jax.Array:
 
 
 def mode_dots(
-    rows: Sequence[jax.Array], core_factors: Sequence[jax.Array]
+    rows: Sequence[jax.Array], core_factors: Sequence[jax.Array],
+    accum_dtype=None,
 ) -> jax.Array:
     """c_r^(n) = ⟨a_{i_n}, b_{:,r}^(n)⟩ for a batch.  -> (N, B, R).
 
     This is the paper's line-6/23 hot loop (warp-shuffle dot products),
-    expressed as N batched matmuls (B,J_n)·(J_n,R).
+    expressed as N batched matmuls (B,J_n)·(J_n,R).  ``accum_dtype``
+    sets ``preferred_element_type`` so bf16 storage rows/factors still
+    contract with f32 MXU accumulation (a no-op for f32 inputs).
     """
-    return jnp.stack([r @ b for r, b in zip(rows, core_factors)], axis=0)
+    pref = None if accum_dtype is None else jnp.dtype(accum_dtype)
+    return jnp.stack(
+        [jnp.matmul(r, b, preferred_element_type=pref)
+         for r, b in zip(rows, core_factors)], axis=0)
 
 
 def exclusive_products(c: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -73,16 +79,21 @@ def predict_from_rows(
 
 
 def mode_products(
-    factors: Sequence[jax.Array], core_factors: Sequence[jax.Array]
+    factors: Sequence[jax.Array], core_factors: Sequence[jax.Array],
+    accum_dtype=None,
 ) -> tuple[jax.Array, ...]:
     """C^(n) = A^(n) B^(n) ∈ R^{I_n × R} — ALL mode dots, precomputed.
 
     ``C^(n)[i, r]`` is exactly the Theorem-1 coefficient ``c_r^(n)`` for row
     ``i``, so ``x̂(i_1..i_N) = Σ_r Π_n C^(n)[i_n, r]`` — the cheap per-query
     path the serving engine caches (``repro.serve``): one gather + product
-    per query instead of J_n-length dot products.
+    per query instead of J_n-length dot products.  ``accum_dtype`` keeps
+    the contraction in f32 even for bf16-stored factors.
     """
-    return tuple(a @ b for a, b in zip(factors, core_factors))
+    pref = None if accum_dtype is None else jnp.dtype(accum_dtype)
+    return tuple(
+        jnp.matmul(a, b, preferred_element_type=pref)
+        for a, b in zip(factors, core_factors))
 
 
 def dense_reconstruct(

@@ -14,6 +14,7 @@ from .base import (
     get_strategy,
     register_strategy,
     resolve_strategy_name,
+    step_donation,
 )
 from .local import LocalStrategy
 from .overlap import StrataOverlapStrategy
@@ -32,6 +33,7 @@ __all__ = [
     "get_strategy",
     "register_strategy",
     "resolve_strategy_name",
+    "step_donation",
     "LocalStrategy",
     "SyncStrategy",
     "StrataStrategy",

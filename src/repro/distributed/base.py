@@ -176,6 +176,28 @@ def get_strategy(name: str | None = None,
 # shared helpers
 # ---------------------------------------------------------------------------
 
+DONATE_ENV_VAR = "REPRO_DONATE_STEP"
+
+
+def step_donation() -> tuple[int, ...]:
+    """``donate_argnums`` for the per-step jits (the DistState argument).
+
+    Every strategy's compiled step is state → state with matching
+    shapes/shardings, so donating the input state lets XLA reuse (alias)
+    the parameter and EF buffers instead of allocating a fresh copy per
+    step.  ``$REPRO_DONATE_STEP`` = ``on`` / ``off`` forces it; the
+    default (``auto``) donates only off-CPU — CPU XLA cannot donate and
+    would warn on every call.  Callers must rebind (``dstate =
+    step(dstate)``), which the launcher and strategies already do.
+    """
+    mode = os.environ.get(DONATE_ENV_VAR, "auto").lower()
+    if mode == "on":
+        return (0,)
+    if mode == "off":
+        return ()
+    return (0,) if jax.default_backend() != "cpu" else ()
+
+
 def compressed_reduce(dense, ef, axis: str | None):
     """int8 error-feedback quantize → (psum over ``axis``) → dequantize.
 
@@ -200,6 +222,7 @@ def compressed_reduce(dense, ef, axis: str | None):
 __all__ = [
     "ENV_VAR",
     "DEFAULT_STRATEGY",
+    "DONATE_ENV_VAR",
     "DistState",
     "DistStrategy",
     "register_strategy",
@@ -207,4 +230,5 @@ __all__ = [
     "resolve_strategy_name",
     "get_strategy",
     "compressed_reduce",
+    "step_donation",
 ]

@@ -9,19 +9,20 @@ making this the single-device numerics reference for compressed runs.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fasttucker import (
-    FastTuckerConfig, FastTuckerParams, TrainState, batch_gradients,
-    dynamic_lr, scatter_row_grads, sgd_step,
+    FastTuckerConfig, FastTuckerParams, TrainState, _sgd_update,
+    dynamic_lr, scatter_row_grads, sgd_step, step_gradients,
 )
 from repro.core.sampling import sample_batch_arrays
 from repro.core.sptensor import SparseTensor
 
-from .base import DistState, DistStrategy, compressed_reduce
+from .base import DistState, DistStrategy, compressed_reduce, step_donation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,10 +36,13 @@ class LocalPlan:
 def _build_jitted(plan: LocalPlan):
     cfg = plan.cfg
 
+    donate = step_donation()
+
     if not plan.compress:
-        # uncompressed local IS the core trainer (both update orders live
-        # in sgd_step) — reuse it rather than maintaining a parallel copy
-        @jax.jit
+        # uncompressed local IS the core trainer (both update orders and
+        # the phase-split/dtype config live in sgd_step) — reuse it
+        # rather than maintaining a parallel copy
+        @partial(jax.jit, donate_argnums=donate)
         def core_step(dstate: DistState, indices, values) -> DistState:
             key = jax.random.fold_in(dstate.key, dstate.step)
             st = sgd_step(TrainState(dstate.params, dstate.step), key,
@@ -47,23 +51,21 @@ def _build_jitted(plan: LocalPlan):
 
         return core_step
 
-    @jax.jit
+    @partial(jax.jit, donate_argnums=donate)
     def step(dstate: DistState, indices, values) -> DistState:
         key = jax.random.fold_in(dstate.key, dstate.step)
         idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
-        grads = batch_gradients(
-            dstate.params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            backend=cfg.backend,
-        )
+        grads = step_gradients(dstate.params, idx, val, cfg)
         dense = scatter_row_grads(dstate.params.factors, idx,
                                   grads.row_grads, backend=cfg.backend)
         dense, ef = compressed_reduce(dense, dstate.ef, axis=None)
         lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, dstate.step)
         lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, dstate.step)
         factors = tuple(
-            f - lr_a * g for f, g in zip(dstate.params.factors, dense))
+            _sgd_update(f, lr_a, g)
+            for f, g in zip(dstate.params.factors, dense))
         core = tuple(
-            b - lr_b * g
+            _sgd_update(b, lr_b, g)
             for b, g in zip(dstate.params.core_factors, grads.core_grads))
         return DistState(FastTuckerParams(factors, core),
                          dstate.step + 1, dstate.key, ef)
@@ -86,7 +88,10 @@ class LocalStrategy(DistStrategy):
 
     def init(self, plan: LocalPlan, state: TrainState,
              key: jax.Array) -> DistState:
-        ef = (tuple(jnp.zeros_like(f) for f in state.params.factors)
+        # EF residuals live in the GRADIENT (accum) dtype — f32 even when
+        # the factors are stored bf16
+        acc = jnp.dtype(plan.cfg.accum_dtype)
+        ef = (tuple(jnp.zeros(f.shape, acc) for f in state.params.factors)
               if plan.compress else ())
         return DistState(state.params, jnp.asarray(state.step, jnp.int32),
                          key, ef)

@@ -24,6 +24,12 @@ variants compile and are reused every epoch. Trajectories are identical to
 ``strata`` under the same seed/schedule: same per-stratum sample keys
 (``fold_in(base, global_step)``), same update expressions — only the
 rotation bookkeeping differs, and rotations are pure data movement.
+
+Phase-split / mixed precision ride through ``stratum_row_update`` (shared
+with ``strata``): ``FastTuckerConfig(phase_split=True)`` routes each
+stratum's gradients through the ``StepIntermediates``-cached two-phase
+kernels, and ``dtype="bfloat16"`` shards/rotates bf16 factor rows — HALF
+the ppermute bytes per rotation — while the gradient psum stays f32.
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.fasttucker import FastTuckerParams
 
-from .base import DistState
+from .base import DistState, step_donation
 from .strata import (
     StrataRunPlan, StrataStrategy, _prepare_run_plan, core_update,
     rotate_shard, strata_state_spec, stratum_row_update,
@@ -100,7 +106,7 @@ def _build_chunk_specializer(plan: OverlapPlan):
             out_specs=spec,
             check_rep=False,
         )
-        return jax.jit(sharded)
+        return jax.jit(sharded, donate_argnums=step_donation())
 
     return specialized
 

@@ -29,12 +29,12 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fasttucker import (
-    FastTuckerConfig, FastTuckerParams, TrainState, batch_gradients,
-    dynamic_lr, scatter_row_grads,
+    FastTuckerConfig, FastTuckerParams, TrainState, _sgd_update,
+    dynamic_lr, scatter_row_grads, step_gradients,
 )
 from repro.core.sptensor import SparseTensor, partition_for_workers
 
-from .base import DistState, DistStrategy, compressed_reduce
+from .base import DistState, DistStrategy, compressed_reduce, step_donation
 
 
 # ---------------------------------------------------------------------------
@@ -124,14 +124,11 @@ def stratum_row_update(cfg: FastTuckerConfig, layout: StrataLayout,
     lidx = jnp.stack(local_idx, axis=1)
 
     lparams = FastTuckerParams(tuple(rot), core_f)
-    grads = batch_gradients(
-        lparams, lidx, val, cfg.lambda_a, cfg.lambda_b, mask=msk,
-        backend=cfg.backend,
-    )
+    grads = step_gradients(lparams, lidx, val, cfg, mask=msk)
     dense = scatter_row_grads(lparams.factors, lidx, grads.row_grads,
                               backend=cfg.backend)
     lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, step_no)
-    new_rot = tuple(f - lr_a * g for f, g in zip(rot, dense))
+    new_rot = tuple(_sgd_update(f, lr_a, g) for f, g in zip(rot, dense))
     return new_rot, grads.core_grads
 
 
@@ -143,7 +140,8 @@ def core_update(cfg: FastTuckerConfig, axis: str, M: int, core_f,
     else:
         summed = jax.lax.psum(core_grads, axis)
     lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, step_no)
-    core_f = tuple(b - (lr_b / M) * g for b, g in zip(core_f, summed))
+    core_f = tuple(
+        _sgd_update(b, lr_b / M, g) for b, g in zip(core_f, summed))
     return core_f, ef
 
 
@@ -255,8 +253,9 @@ def _prepare_run_plan(tensor, cfg, mesh, compress, seed, axis="data"):
 def _init_strata_state(plan, state: TrainState, key) -> DistState:
     params = pad_factors_for_strata(state.params, plan.layout)
     M = plan.layout.num_workers
+    acc = jnp.dtype(plan.cfg.accum_dtype)  # EF lives in grad dtype
     ef = (tuple(
-        jnp.zeros((M,) + b.shape, b.dtype)
+        jnp.zeros((M,) + b.shape, acc)
         for b in state.params.core_factors)
         if plan.compress else ())
     return DistState(params, jnp.asarray(state.step, jnp.int32), key, ef)
@@ -300,7 +299,7 @@ def _build_strata_specializer(plan: StrataRunPlan):
             out_specs=spec,
             check_rep=False,
         )
-        return jax.jit(sharded)
+        return jax.jit(sharded, donate_argnums=step_donation())
 
     return specialized
 

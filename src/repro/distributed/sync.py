@@ -16,13 +16,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fasttucker import (
-    FastTuckerConfig, FastTuckerParams, TrainState, batch_gradients,
-    dynamic_lr, scatter_row_grads,
+    FastTuckerConfig, FastTuckerParams, TrainState, _sgd_update,
+    dynamic_lr, scatter_row_grads, step_gradients,
 )
 from repro.core.sampling import sample_batch_arrays
 from repro.core.sptensor import SparseTensor
 
-from .base import DistState, DistStrategy, compressed_reduce
+from .base import DistState, DistStrategy, compressed_reduce, step_donation
 
 
 def shard_nonzeros(tensor: SparseTensor, num_shards: int):
@@ -54,9 +54,7 @@ def _sync_local_update(cfg: FastTuckerConfig, axis: str, compress: bool,
     me = jax.lax.axis_index(axis)
     key = jax.random.fold_in(key, me)
     idx, val = sample_batch_arrays(key, idx_shard, val_shard, cfg.batch_size)
-    grads = batch_gradients(
-        params, idx, val, cfg.lambda_a, cfg.lambda_b, backend=cfg.backend,
-    )
+    grads = step_gradients(params, idx, val, cfg)
     dense = scatter_row_grads(params.factors, idx, grads.row_grads,
                               backend=cfg.backend)
     if compress:
@@ -68,9 +66,10 @@ def _sync_local_update(cfg: FastTuckerConfig, axis: str, compress: bool,
     lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, step_no)
     lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, step_no)
     factors = tuple(
-        f - (lr_a / nshards) * g for f, g in zip(params.factors, dense))
+        _sgd_update(f, lr_a / nshards, g)
+        for f, g in zip(params.factors, dense))
     core_f = tuple(
-        b - (lr_b / nshards) * g
+        _sgd_update(b, lr_b / nshards, g)
         for b, g in zip(params.core_factors, core))
     return FastTuckerParams(factors, core_f), ef
 
@@ -151,7 +150,7 @@ def _build_jitted(plan: SyncPlan):
         out_specs=state_spec,
         check_rep=False,
     )
-    return jax.jit(sharded)
+    return jax.jit(sharded, donate_argnums=step_donation())
 
 
 class SyncStrategy(DistStrategy):
@@ -165,8 +164,9 @@ class SyncStrategy(DistStrategy):
     def init(self, plan: SyncPlan, state: TrainState,
              key: jax.Array) -> DistState:
         M = plan.num_devices
+        acc = jnp.dtype(plan.cfg.accum_dtype)  # EF lives in grad dtype
         ef = (tuple(
-            jnp.zeros((M,) + f.shape, f.dtype) for f in state.params.factors)
+            jnp.zeros((M,) + f.shape, acc) for f in state.params.factors)
             if plan.compress else ())
         return DistState(state.params, jnp.asarray(state.step, jnp.int32),
                          key, ef)

@@ -44,11 +44,41 @@ PALLAS_BACKENDS = ("pallas", "pallas_interpret")
 
 
 class KruskalGrads(NamedTuple):
-    """Fused forward+gradient results in the tuple-of-modes layout."""
+    """Fused forward+gradient results in the tuple-of-modes layout.
+
+    ``row_grads`` follows the requested ``row_modes`` order (all modes by
+    default) and is ``()`` when the row stage was skipped; ``core_grads``
+    is ``()`` when ``want_core=False``; ``c`` holds the emitted per-mode
+    ``(B, R)`` mode products (the ``StepIntermediates`` cache) when
+    ``emit_c=True`` and ``()`` otherwise.
+    """
     pred: jax.Array                      # (B,)
     err: jax.Array                       # (B,) masked residual
-    row_grads: tuple[jax.Array, ...]     # per-mode (B, J_n)
+    row_grads: tuple[jax.Array, ...]     # per requested mode (B, J_n)
     core_grads: tuple[jax.Array, ...]    # per-mode (J_n, R)
+    c: tuple[jax.Array, ...] = ()        # per-mode (B, R) when emitted
+
+
+DEFAULT_ACCUM = "float32"
+
+
+def resolve_accum_dtype(accum_dtype=None) -> jnp.dtype:
+    """Accumulation dtype for every MXU dot (bf16 storage still sums f32)."""
+    return jnp.dtype(accum_dtype or DEFAULT_ACCUM)
+
+
+def _mode_dot(rows_n: jax.Array, core_n: jax.Array,
+              accum_dtype=None) -> jax.Array:
+    """Single-mode Theorem-1 product c^(n) = a_rows^(n) B^(n) → (B, R).
+
+    The Gauss-Seidel phase-split step refreshes exactly one cached mode
+    product after each mode's row update through this op.  Shared by
+    both backends: a lone (B, J)×(J, R) contraction is one MXU matmul,
+    for which XLA's native dot IS the optimal kernel — no ``pallas_call``
+    even on the Pallas backends.
+    """
+    return jnp.matmul(rows_n, core_n,
+                      preferred_element_type=resolve_accum_dtype(accum_dtype))
 
 
 def _denominators(
@@ -79,14 +109,18 @@ class XlaBackend:
     name = "xla"
     interpret = None  # not a Pallas backend
 
+    mode_dot = staticmethod(_mode_dot)
+
     def kruskal_contract(
         self,
         rows: Sequence[jax.Array],
         core_factors: Sequence[jax.Array],
+        accum_dtype=None,
     ) -> tuple[jax.Array, jax.Array]:
         from repro.core.kruskal import exclusive_products, mode_dots
 
-        c = mode_dots(rows, core_factors)          # (N, B, R)
+        c = mode_dots(rows, core_factors,
+                      accum_dtype=resolve_accum_dtype(accum_dtype))
         full, pexc = exclusive_products(c)
         return jnp.sum(full, axis=-1), pexc
 
@@ -102,8 +136,26 @@ class XlaBackend:
         row_mean: bool = False,
         core_mean: bool = True,
         err_override: jax.Array | None = None,
+        c: Sequence[jax.Array] | None = None,
+        row_modes: tuple[int, ...] | None = None,
+        want_core: bool = True,
+        emit_c: bool = False,
+        accum_dtype=None,
     ) -> KruskalGrads:
-        pred, pexc = self.kruskal_contract(rows, core_factors)
+        from repro.core.kruskal import exclusive_products
+
+        acc_dt = resolve_accum_dtype(accum_dtype)
+        N = len(rows)
+        if row_modes is None:
+            row_modes = tuple(range(N))
+        if c is None:
+            c_stack = None
+            pred, pexc = self.kruskal_contract(rows, core_factors,
+                                               accum_dtype=acc_dt)
+        else:
+            c_stack = jnp.stack(tuple(c), axis=0)       # (N, B, R)
+            full, pexc = exclusive_products(c_stack)
+            pred = jnp.sum(full, axis=-1)
         err = err_override if err_override is not None else pred - val
         if mask is not None:
             err = jnp.where(mask, err, 0.0)
@@ -112,21 +164,33 @@ class XlaBackend:
         w_row = err / row_denom
         w_core = err / core_denom
         row_grads = []
-        core_grads = []
-        for n in range(len(rows)):
+        for n in row_modes:
             pex_n = pexc[n]                             # (B, R)
-            d_n = pex_n @ core_factors[n].T             # (B, J_n)
+            d_n = jnp.matmul(pex_n, core_factors[n].T,
+                             preferred_element_type=acc_dt)  # (B, J_n)
             reg_rows = rows[n]
             if mask is not None:
                 reg_rows = jnp.where(mask[:, None], reg_rows, 0.0)
             row_grads.append(
                 w_row[:, None] * d_n + (lambda_a / row_denom) * reg_rows
             )
-            core_grads.append(
-                rows[n].T @ (w_core[:, None] * pex_n)
-                + lambda_b * core_factors[n]
-            )
-        return KruskalGrads(pred, err, tuple(row_grads), tuple(core_grads))
+        core_grads = []
+        if want_core:
+            for n in range(N):
+                core_grads.append(
+                    jnp.matmul(rows[n].T, w_core[:, None] * pexc[n],
+                               preferred_element_type=acc_dt)
+                    + lambda_b * core_factors[n]
+                )
+        c_out = ()
+        if emit_c:
+            if c_stack is None:
+                from repro.core.kruskal import mode_dots
+
+                c_stack = mode_dots(rows, core_factors, accum_dtype=acc_dt)
+            c_out = tuple(c_stack[n] for n in range(N))
+        return KruskalGrads(pred, err, tuple(row_grads), tuple(core_grads),
+                            c_out)
 
     def scatter_accum(
         self, grads: jax.Array, idx: jax.Array, num_rows: int
@@ -166,16 +230,20 @@ class PallasBackend:
         self.block_b = block_b
         self.block_i = block_i
 
+    mode_dot = staticmethod(_mode_dot)
+
     def kruskal_contract(
         self,
         rows: Sequence[jax.Array],
         core_factors: Sequence[jax.Array],
+        accum_dtype=None,
     ) -> tuple[jax.Array, jax.Array]:
         from .kruskal_contract import kruskal_contract as kc
 
         a = _stack_padded_rows(rows)
         b = _stack_padded_factors(core_factors)
-        return kc(a, b, block_b=self.block_b, interpret=self.interpret)
+        return kc(a, b, block_b=self.block_b, interpret=self.interpret,
+                  accum_dtype=str(resolve_accum_dtype(accum_dtype)))
 
     def kruskal_grad(
         self,
@@ -189,17 +257,23 @@ class PallasBackend:
         row_mean: bool = False,
         core_mean: bool = True,
         err_override: jax.Array | None = None,
+        c: Sequence[jax.Array] | None = None,
+        row_modes: tuple[int, ...] | None = None,
+        want_core: bool = True,
+        emit_c: bool = False,
+        accum_dtype=None,
     ) -> KruskalGrads:
         from .kruskal_grad import kruskal_grad as kg
 
+        acc_dt = resolve_accum_dtype(accum_dtype)
         a = _stack_padded_rows(rows)
         b = _stack_padded_factors(core_factors)
         row_denom, core_denom = _denominators(
             val.shape[0], mask, row_mean, core_mean)
         if mask is None:
-            mask_f = jnp.ones_like(val, dtype=a.dtype)
+            mask_f = jnp.ones_like(val, dtype=acc_dt)
         else:
-            mask_f = mask.astype(a.dtype)
+            mask_f = mask.astype(acc_dt)
         if err_override is not None:
             # err = (0·pred − (−ḡ))·mask = ḡ exactly — NOT pred − (pred − ḡ),
             # which cancels catastrophically for |ḡ| < ulp(pred)
@@ -212,18 +286,29 @@ class PallasBackend:
             jnp.asarray(lambda_a, jnp.float32),
             jnp.asarray(lambda_b, jnp.float32),
             jnp.asarray(pred_coef, jnp.float32),
-        ]).astype(a.dtype)
-        pred, err, rg, cg = kg(
-            a, b, val_in.astype(a.dtype), mask_f, scal,
+        ]).astype(acc_dt)
+        c_stacked = (None if c is None
+                     else jnp.stack(tuple(c), axis=0).astype(acc_dt))
+        outs = kg(
+            a, b, val_in.astype(acc_dt), mask_f, scal, c_stacked,
+            row_modes=row_modes, want_core=want_core, emit_c=emit_c,
             block_b=self.block_b, interpret=self.interpret,
+            accum_dtype=str(jnp.dtype(acc_dt)),
         )
+        if row_modes is None:
+            row_modes = tuple(range(len(rows)))
         row_grads = tuple(
-            rg[n, :, : r.shape[-1]] for n, r in enumerate(rows)
-        )
+            outs.row_grads[j, :, : rows[n].shape[-1]]
+            for j, n in enumerate(row_modes)
+        ) if row_modes else ()
         core_grads = tuple(
-            cg[n, : cf.shape[0]] for n, cf in enumerate(core_factors)
-        )
-        return KruskalGrads(pred, err, row_grads, core_grads)
+            outs.core_grads[n, : cf.shape[0]]
+            for n, cf in enumerate(core_factors)
+        ) if want_core else ()
+        c_out = (tuple(outs.c[n] for n in range(len(rows)))
+                 if emit_c else ())
+        return KruskalGrads(outs.pred, outs.err, row_grads, core_grads,
+                            c_out)
 
     def scatter_accum(
         self, grads: jax.Array, idx: jax.Array, num_rows: int
@@ -329,7 +414,13 @@ def _kruskal_predict_bwd(backend_name, residuals, g):
         mask=None, lambda_a=0.0, lambda_b=0.0,
         row_mean=False, core_mean=False, err_override=g,
     )
-    return tuple(kg.row_grads), tuple(kg.core_grads)
+    # cotangent dtypes must match the primals (bf16 storage params get
+    # bf16 cotangents even though the kernel accumulated them in f32)
+    return (
+        tuple(t.astype(r.dtype) for t, r in zip(kg.row_grads, rows)),
+        tuple(t.astype(b.dtype) for t, b in zip(kg.core_grads,
+                                                core_factors)),
+    )
 
 
 kruskal_predict.defvjp(_kruskal_predict_fwd, _kruskal_predict_bwd)
@@ -368,8 +459,10 @@ register_backend(PallasBackend("pallas_interpret", interpret=True))
 __all__ = [
     "ENV_VAR",
     "DEFAULT_BACKEND",
+    "DEFAULT_ACCUM",
     "PALLAS_BACKENDS",
     "KruskalGrads",
+    "resolve_accum_dtype",
     "XlaBackend",
     "PallasBackend",
     "register_backend",

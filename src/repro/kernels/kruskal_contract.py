@@ -27,8 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(a_ref, b_ref, pred_ref, pexc_ref, *, n_modes: int):
+def _kernel(a_ref, b_ref, pred_ref, pexc_ref, *, n_modes: int,
+            accum_dtype: str):
     # a_ref: (N, BT, J); b_ref: (N, J, R); pred_ref: (BT,); pexc_ref: (N, BT, R)
+    acc_dt = jnp.dtype(accum_dtype)
     cs = []
     for n in range(n_modes):  # static unroll over modes (N ≤ 10)
         a_n = a_ref[n]                       # (BT, J)
@@ -36,7 +38,7 @@ def _kernel(a_ref, b_ref, pred_ref, pexc_ref, *, n_modes: int):
         cs.append(
             jax.lax.dot_general(
                 a_n, b_n, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
+                preferred_element_type=acc_dt,
             )
         )
     # exclusive products via static prefix/suffix chains
@@ -56,17 +58,25 @@ def _kernel(a_ref, b_ref, pred_ref, pexc_ref, *, n_modes: int):
         pexc_ref[n] = (prefix[n] * suffix[n]).astype(pexc_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                              "accum_dtype"))
 def kruskal_contract(
     a_rows: jax.Array,  # (N, B, J)
     b_fac: jax.Array,   # (N, J, R)
     *,
     block_b: int = 512,
     interpret: bool = True,
+    accum_dtype: str = "float32",
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (pred (B,), pexc (N, B, R)). interpret=True on CPU."""
+    """Returns (pred (B,), pexc (N, B, R)). interpret=True on CPU.
+
+    Results come back in ``accum_dtype`` even for bf16 storage inputs —
+    the in-kernel dots already accumulate at that precision; don't round
+    back down on write.
+    """
     N, B, J = a_rows.shape
     R = b_fac.shape[-1]
+    acc_dt = jnp.dtype(accum_dtype)
     bt = min(block_b, B)
     if B % bt:
         pad = bt - B % bt
@@ -74,7 +84,7 @@ def kruskal_contract(
     Bp = a_rows.shape[1]
     grid = (Bp // bt,)
     pred, pexc = pl.pallas_call(
-        functools.partial(_kernel, n_modes=N),
+        functools.partial(_kernel, n_modes=N, accum_dtype=accum_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((N, bt, J), lambda i: (0, i, 0)),
@@ -85,8 +95,8 @@ def kruskal_contract(
             pl.BlockSpec((N, bt, R), lambda i: (0, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((Bp,), a_rows.dtype),
-            jax.ShapeDtypeStruct((N, Bp, R), a_rows.dtype),
+            jax.ShapeDtypeStruct((Bp,), acc_dt),
+            jax.ShapeDtypeStruct((N, Bp, R), acc_dt),
         ],
         interpret=interpret,
     )(a_rows, b_fac)

@@ -1,8 +1,8 @@
-"""Pallas TPU kernel: fully fused Theorem-1/2 forward + gradient pass.
+"""Pallas TPU kernel: fused Theorem-1/2 forward + gradient pass, phase-aware.
 
 One ``pallas_call`` tile pass computes, for a VMEM tile of BT sampled
-nonzeros, the entire per-sample hot loop of the paper (Algorithm 1
-lines 4–10 *and* the Eq. 13 / Eq. 17 gradient stage that the follow-up
+nonzeros, the per-sample hot loop of the paper (Algorithm 1 lines 4–10
+*and* the Eq. 13 / Eq. 17 gradient stage that the follow-up
 cuFasterTucker fuses on-GPU):
 
     c[n]     = a_tile[n] @ B[n]                 # (BT,J)×(J,R) on the MXU
@@ -21,17 +21,41 @@ uses the revisiting-output trick: its block index is constant across the
 1-D batch grid, so Pallas keeps it in VMEM and the kernel accumulates
 partial sums across tiles, seeding tile 0 with the λ_b·B^(n) regularizer.
 
+Phase-split extensions (cuFasterTucker's invariant-intermediate caching):
+
+  * ``emit_c=True``   writes the per-tile mode products c[n] out as an
+    extra ``(N, B, R)`` result — the ``StepIntermediates`` cache the core
+    phase consumes later.  The tile never round-trips through HBM inside
+    the pass: it is produced on the MXU, used for the chains, and only
+    then stored.
+  * ``c=...``         consumes a cached ``(N, B, R)`` tile instead of
+    re-running the N mode dots — the dominant saving of the phase-split
+    step: a ``pallas_call`` body is opaque to XLA, so unlike the jnp
+    reference path there is no CSE/DCE to rescue redundant in-kernel
+    dots; skipping them here is a *real* FLOP reduction.
+  * ``row_modes``     emits Eq.-13 row gradients only for the selected
+    modes (the Gauss-Seidel phase-split updates one mode per pass);
+    ``()`` skips the row-gradient stage entirely.
+  * ``want_core``     gates the Eq.-17 accumulator (the factor phase
+    does not need it).
+
+Mixed precision: inputs may be bf16 (storage dtype); every MXU dot uses
+``preferred_element_type=accum_dtype`` (f32) and ALL results — pred, err,
+row/core gradients, emitted c — are produced in ``accum_dtype``, so the
+revisited core-gradient accumulator never accumulates in bf16.
+
 Zero padding is exact end to end: padded J columns produce zero dot
 products and zero gradient columns; padded batch rows carry mask 0 and
 therefore contribute nothing to the core accumulator.
 
 Grid: 1-D over batch tiles. VMEM per step ≈ 2·N·BT·J + 2·N·J·R +
-N·BT·R + 3·BT floats — for N=4, BT=512, J=R=32 about 1.2 MB, far under
+2·N·BT·R + 3·BT floats — for N=4, BT=512, J=R=32 about 1.4 MB, far under
 the ~16 MB budget.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,19 +71,45 @@ from jax.experimental import pallas as pl
 NUM_SCALARS = 5
 
 
-def _kernel(scal_ref, a_ref, b_ref, val_ref, mask_ref,
-            pred_ref, err_ref, rg_ref, cg_ref, *, n_modes: int):
-    # scal_ref: (4,); a_ref: (N, BT, J); b_ref: (N, J, R);
-    # val/mask_ref: (BT,); pred/err_ref: (BT,);
-    # rg_ref: (N, BT, J); cg_ref: (N, J, R) — revisited across the grid.
-    cs = []
-    for n in range(n_modes):  # static unroll over modes (N ≤ 10)
-        cs.append(
+class KernelOuts(NamedTuple):
+    """Outputs of the phase-aware fused kernel (absent stages are None)."""
+    pred: jax.Array                        # (B,) accum dtype
+    err: jax.Array                         # (B,)
+    row_grads: Optional[jax.Array] = None  # (len(row_modes), B, J)
+    core_grads: Optional[jax.Array] = None  # (N, J, R)
+    c: Optional[jax.Array] = None          # (N, B, R) emitted mode products
+
+
+def _kernel(*refs, n_modes: int, row_modes: tuple, want_core: bool,
+            emit_c: bool, consume_c: bool, accum_dtype: str):
+    # ins:  scal (5,); a (N, BT, J); b (N, J, R); val (BT,); mask (BT,);
+    #       [c_in (N, BT, R) when consume_c]
+    # outs: pred (BT,); err (BT,); [rg (len(row_modes), BT, J)];
+    #       [cg (N, J, R) — revisited across the grid]; [c_out (N, BT, R)]
+    acc_dt = jnp.dtype(accum_dtype)
+    it = iter(refs)
+    scal_ref, a_ref, b_ref, val_ref, mask_ref = (next(it) for _ in range(5))
+    c_ref = next(it) if consume_c else None
+    pred_ref, err_ref = next(it), next(it)
+    rg_ref = next(it) if row_modes else None
+    cg_ref = next(it) if want_core else None
+    cout_ref = next(it) if emit_c else None
+
+    if consume_c:
+        # the invariant-intermediate cache: mode dots already on hand
+        cs = [c_ref[n] for n in range(n_modes)]
+    else:
+        cs = [
             jax.lax.dot_general(
                 a_ref[n], b_ref[n], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
+                preferred_element_type=acc_dt,
             )
-        )
+            for n in range(n_modes)  # static unroll over modes (N ≤ 10)
+        ]
+    if emit_c:
+        for n in range(n_modes):
+            cout_ref[n] = cs[n].astype(cout_ref.dtype)
+
     prefix = [None] * n_modes
     suffix = [None] * n_modes
     acc = jnp.ones_like(cs[0])
@@ -72,7 +122,7 @@ def _kernel(scal_ref, a_ref, b_ref, val_ref, mask_ref,
         suffix[n] = acc
         acc = acc * cs[n]
 
-    pred = jnp.sum(full, axis=-1)                       # (BT,) f32
+    pred = jnp.sum(full, axis=-1)                       # (BT,) accum
     mask = mask_ref[...].astype(pred.dtype)
     err = (scal_ref[SCAL_PRED_COEF] * pred
            - val_ref[...].astype(pred.dtype)) * mask
@@ -86,78 +136,121 @@ def _kernel(scal_ref, a_ref, b_ref, val_ref, mask_ref,
     w_row = err * inv_row                               # (BT,)
     w_core = err * inv_core
 
-    @pl.when(pl.program_id(0) == 0)
-    def _seed_core():                                   # λ_b·B^(n) once
-        cg_ref[...] = (lam_b * b_ref[...]).astype(cg_ref.dtype)
+    if want_core:
+        @pl.when(pl.program_id(0) == 0)
+        def _seed_core():                               # λ_b·B^(n) once
+            cg_ref[...] = (lam_b * b_ref[...]).astype(cg_ref.dtype)
 
-    for n in range(n_modes):
+    for j, n in enumerate(row_modes):
         pexc_n = prefix[n] * suffix[n]                  # (BT, R)
         # Eq. 13: err·(pexc B^T) + λ_a·a (padding rows killed via mask)
         d_n = jax.lax.dot_general(
             pexc_n, b_ref[n], (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
+            preferred_element_type=acc_dt,
         )                                               # (BT, J)
-        rg_ref[n] = (
+        rg_ref[j] = (
             w_row[:, None] * d_n
             + (lam_a * inv_row) * mask[:, None] * a_ref[n]
         ).astype(rg_ref.dtype)
-        # Eq. 17 partial: aᵀ (err ⊙ pexc), accumulated across batch tiles
-        cg_ref[n] += jax.lax.dot_general(
-            a_ref[n], w_core[:, None] * pexc_n,
-            (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).astype(cg_ref.dtype)
+    if want_core:
+        for n in range(n_modes):
+            pexc_n = prefix[n] * suffix[n]
+            # Eq. 17 partial: aᵀ (err ⊙ pexc), accumulated across batch tiles
+            cg_ref[n] += jax.lax.dot_general(
+                a_ref[n].astype(acc_dt), w_core[:, None] * pexc_n,
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=acc_dt,
+            ).astype(cg_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "row_modes", "want_core", "emit_c", "block_b", "interpret",
+    "accum_dtype"))
 def kruskal_grad(
     a_rows: jax.Array,  # (N, B, J)  gathered factor rows (J zero-padded)
     b_fac: jax.Array,   # (N, J, R)  Kruskal core factors (zero-padded)
     val: jax.Array,     # (B,)       sampled tensor values
     mask: jax.Array,    # (B,)       1.0 valid / 0.0 padding
     scal: jax.Array,    # (5,)  [1/ρ_row, 1/δ_core, λ_a, λ_b, pred_coef]
+    c: jax.Array | None = None,  # (N, B, R) cached mode products (consume)
     *,
+    row_modes: tuple[int, ...] | None = None,  # None = all; () = none
+    want_core: bool = True,
+    emit_c: bool = False,
     block_b: int = 512,
     interpret: bool = True,
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    accum_dtype: str = "float32",
+) -> KernelOuts:
     """Fused contraction + Eq.13/17 gradients in a single ``pallas_call``.
 
-    Returns ``(pred (B,), err (B,), row_grads (N, B, J),
-    core_grads (N, J, R))``; ``core_grads`` already includes the λ_b·B
-    regularizer term.
+    Default flags reproduce the original fully fused joint pass; the
+    phase-split step uses ``emit_c`` (factor phase: cache the mode
+    products) and ``c=``/``row_modes``/``want_core`` (consume the cache,
+    compute only the gradients this phase needs).  ``core_grads`` already
+    includes the λ_b·B regularizer term.
     """
     N, B, J = a_rows.shape
     R = b_fac.shape[-1]
+    acc_dt = jnp.dtype(accum_dtype)
+    if row_modes is None:
+        row_modes = tuple(range(N))
+    nr = len(row_modes)
     bt = min(block_b, B)
     if B % bt:
         pad = bt - B % bt
         a_rows = jnp.pad(a_rows, ((0, 0), (0, pad), (0, 0)))
         val = jnp.pad(val, (0, pad))
         mask = jnp.pad(mask, (0, pad))  # zeros: no core/err contribution
+        if c is not None:
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
     Bp = a_rows.shape[1]
     grid = (Bp // bt,)
-    pred, err, rg, cg = pl.pallas_call(
-        functools.partial(_kernel, n_modes=N),
+
+    in_specs = [
+        pl.BlockSpec((NUM_SCALARS,), lambda i: (0,)),
+        pl.BlockSpec((N, bt, J), lambda i: (0, i, 0)),
+        pl.BlockSpec((N, J, R), lambda i: (0, 0, 0)),
+        pl.BlockSpec((bt,), lambda i: (i,)),
+        pl.BlockSpec((bt,), lambda i: (i,)),
+    ]
+    operands = [scal, a_rows, b_fac, val, mask]
+    if c is not None:
+        in_specs.append(pl.BlockSpec((N, bt, R), lambda i: (0, i, 0)))
+        operands.append(c)
+
+    out_specs = [
+        pl.BlockSpec((bt,), lambda i: (i,)),
+        pl.BlockSpec((bt,), lambda i: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Bp,), acc_dt),
+        jax.ShapeDtypeStruct((Bp,), acc_dt),
+    ]
+    if nr:
+        out_specs.append(pl.BlockSpec((nr, bt, J), lambda i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nr, Bp, J), acc_dt))
+    if want_core:
+        out_specs.append(pl.BlockSpec((N, J, R), lambda i: (0, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((N, J, R), acc_dt))
+    if emit_c:
+        out_specs.append(pl.BlockSpec((N, bt, R), lambda i: (0, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((N, Bp, R), acc_dt))
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel, n_modes=N, row_modes=row_modes, want_core=want_core,
+            emit_c=emit_c, consume_c=c is not None,
+            accum_dtype=accum_dtype),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((NUM_SCALARS,), lambda i: (0,)),
-            pl.BlockSpec((N, bt, J), lambda i: (0, i, 0)),
-            pl.BlockSpec((N, J, R), lambda i: (0, 0, 0)),
-            pl.BlockSpec((bt,), lambda i: (i,)),
-            pl.BlockSpec((bt,), lambda i: (i,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bt,), lambda i: (i,)),
-            pl.BlockSpec((bt,), lambda i: (i,)),
-            pl.BlockSpec((N, bt, J), lambda i: (0, i, 0)),
-            pl.BlockSpec((N, J, R), lambda i: (0, 0, 0)),  # revisited
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp,), a_rows.dtype),
-            jax.ShapeDtypeStruct((Bp,), a_rows.dtype),
-            jax.ShapeDtypeStruct((N, Bp, J), a_rows.dtype),
-            jax.ShapeDtypeStruct((N, J, R), a_rows.dtype),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(scal, a_rows, b_fac, val, mask)
-    return pred[:B], err[:B], rg[:, :B], cg
+    )(*operands)
+
+    it = iter(outs)
+    pred, err = next(it)[:B], next(it)[:B]
+    rg = next(it)[:, :B] if nr else None
+    cg = next(it) if want_core else None
+    c_out = next(it)[:, :B] if emit_c else None
+    return KernelOuts(pred, err, rg, cg, c_out)

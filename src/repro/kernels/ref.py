@@ -29,26 +29,56 @@ def kruskal_grad_ref(
     val: jax.Array,     # (B,)
     mask: jax.Array,    # (B,)  1.0 valid / 0.0 padding
     scal: jax.Array,    # (5,)  [1/ρ_row, 1/δ_core, λ_a, λ_b, pred_coef]
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Oracle for the fused forward+gradient kernel (same stacked layout).
+    c: jax.Array | None = None,  # (N, B, R) cached mode products (consume)
+    *,
+    row_modes: tuple[int, ...] | None = None,  # None = all; () = none
+    want_core: bool = True,
+    emit_c: bool = False,
+) -> tuple:
+    """Oracle for the phase-aware fused forward+gradient kernel.
 
-    Returns (pred (B,), err (B,), row_grads (N,B,J), core_grads (N,J,R)).
+    Default flags return the original 4-tuple
+    ``(pred (B,), err (B,), row_grads (N,B,J), core_grads (N,J,R))``;
+    the phase flags mirror ``kruskal_grad.kruskal_grad`` — ``c`` replaces
+    the mode dots with the cached intermediates, ``row_modes`` selects
+    which modes' Eq.-13 gradients to emit, ``want_core`` gates Eq. 17,
+    ``emit_c`` appends the (possibly recomputed) mode products.  Absent
+    stages come back as ``None``.
     """
-    pred, pexc = kruskal_contract_ref(a_rows, b_fac)
+    N = a_rows.shape[0]
+    if c is None:
+        c = jnp.einsum("nbj,njr->nbr", a_rows, b_fac,
+                       preferred_element_type=jnp.float32)
+    ones = jnp.ones_like(c[0])
+    prefix = jnp.concatenate([ones[None], jnp.cumprod(c[:-1], 0)], 0)
+    suffix = jnp.concatenate([jnp.cumprod(c[:0:-1], 0)[::-1], ones[None]], 0)
+    pexc = prefix * suffix
+    pred = jnp.sum(pexc[0] * c[0], axis=-1)
     inv_row, inv_core, lam_a, lam_b, pred_coef = (
         scal[i] for i in range(5))
     err = (pred_coef * pred - val) * mask
     w_row = err * inv_row
     w_core = err * inv_core
-    row_grads = (
-        w_row[None, :, None] * jnp.einsum("nbr,njr->nbj", pexc, b_fac)
-        + (lam_a * inv_row) * mask[None, :, None] * a_rows
-    )
-    core_grads = (
-        jnp.einsum("nbj,nbr->njr", a_rows, w_core[None, :, None] * pexc)
-        + lam_b * b_fac
-    )
-    return pred, err, row_grads, core_grads
+    if row_modes is None:
+        row_modes = tuple(range(N))
+    row_grads = None
+    if row_modes:
+        sel = jnp.asarray(row_modes)
+        row_grads = (
+            w_row[None, :, None]
+            * jnp.einsum("nbr,njr->nbj", pexc[sel], b_fac[sel],
+                         preferred_element_type=jnp.float32)
+            + (lam_a * inv_row) * mask[None, :, None] * a_rows[sel]
+        )
+    core_grads = None
+    if want_core:
+        core_grads = (
+            jnp.einsum("nbj,nbr->njr", a_rows,
+                       w_core[None, :, None] * pexc,
+                       preferred_element_type=jnp.float32)
+            + lam_b * b_fac
+        )
+    return pred, err, row_grads, core_grads, (c if emit_c else None)
 
 
 def scatter_accum_ref(

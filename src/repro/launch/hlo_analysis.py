@@ -7,6 +7,10 @@ count. This module parses ``compiled.as_text()`` and computes:
   * flops            — 2·M·N·K for dots, |shape| per elementwise arith op,
                        recursing through fusions/calls, multiplying while
                        bodies by ``known_trip_count``;
+  * dot_flops        — the dot-only (MXU) subset of ``flops``: the number
+                       the phase-split step tests assert shrinks when the
+                       ``StepIntermediates`` cache replaces recomputed
+                       mode products;
   * transcendentals  — exp/log/tanh/… ops;
   * collective bytes — per collective kind: operand bytes (assignment's
                        formula) and ring-model wire bytes, trip-multiplied;
@@ -76,6 +80,7 @@ def _shape_elems(text: str) -> tuple[int, int]:
 @dataclass
 class Costs:
     flops: float = 0.0
+    dot_flops: float = 0.0   # the MXU subset of flops (dot ops only)
     transcendentals: float = 0.0
     hbm_bytes: float = 0.0
     coll_operand: dict = field(default_factory=lambda: dict.fromkeys(
@@ -86,6 +91,7 @@ class Costs:
     def add(self, other: "Costs", mult: float = 1.0,
             include_bytes: bool = True):
         self.flops += other.flops * mult
+        self.dot_flops += other.dot_flops * mult
         self.transcendentals += other.transcendentals * mult
         if include_bytes:
             self.hbm_bytes += other.hbm_bytes * mult
@@ -96,6 +102,7 @@ class Costs:
     def as_dict(self) -> dict:
         return {
             "flops": self.flops,
+            "dot_flops": self.dot_flops,
             "transcendentals": self.transcendentals,
             "hbm_bytes": self.hbm_bytes,
             "collective_operand_bytes": dict(self.coll_operand),
@@ -293,7 +300,9 @@ class HloModule:
             io_bytes = res_bytes + self._operand_bytes(comp_name, rhs)
 
             if op == "dot":
-                total.flops += self._dot_flops(comp_name, rhs)
+                df = self._dot_flops(comp_name, rhs)
+                total.flops += df
+                total.dot_flops += df
                 total.hbm_bytes += io_bytes
             elif op == "fusion":
                 cm = re.search(r"calls=%([\w\.\-]+)", rhs)

@@ -15,11 +15,20 @@ every strategy. ``--mode`` is a deprecated alias for ``--strategy``;
 ``--backend`` selects the kernel backend from ``repro.kernels.dispatch``
 (``xla`` reference jnp, ``pallas`` compiled, ``pallas_interpret``
 CPU-testable kernels; default resolves ``$REPRO_KERNEL_BACKEND`` then
-``xla``). Example:
+``xla``).
+
+``--phase-split`` routes every strategy's step through the
+``StepIntermediates``-cached two-phase update (bitwise identical in f32,
+fewer real kernel dots on the Pallas backends); ``--dtype bfloat16``
+stores factors/core factors in bf16 with f32 MXU accumulation
+(``--accum-dtype``); ``--donate on`` (default ``auto``: off-CPU only)
+donates the step's DistState buffers into the compiled update so XLA
+aliases instead of reallocating them. Example:
 
     PYTHONPATH=src python -m repro.launch.std_train --strategy strata_overlap \
         --dims 2000,1500,1000 --nnz 500000 --steps 300 --rank 8 \
-        --core-rank 8 --backend pallas_interpret
+        --core-rank 8 --backend pallas_interpret --phase-split \
+        --dtype bfloat16
 """
 from __future__ import annotations
 
@@ -64,6 +73,21 @@ def main() -> None:
     ap.add_argument("--backend", default=None,
                     help="kernel backend: xla | pallas | pallas_interpret "
                          "(default: $REPRO_KERNEL_BACKEND or xla)")
+    ap.add_argument("--phase-split", action="store_true",
+                    help="two-phase factor/core step with the "
+                         "StepIntermediates cache (bitwise-identical "
+                         "numerics; fewer real kernel dots on Pallas)")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="parameter storage dtype (bf16 halves parameter "
+                         "memory and rotation bytes)")
+    ap.add_argument("--accum-dtype", default="float32",
+                    choices=["float32"],
+                    help="MXU dot / gradient accumulation dtype")
+    ap.add_argument("--donate", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="donate the DistState buffers into the compiled "
+                         "step (auto: off-CPU only)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="DEPRECATED: alias for --backend "
                          "pallas/pallas_interpret")
@@ -76,6 +100,13 @@ def main() -> None:
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
+    # the strategies read the donation policy when they BUILD their jitted
+    # steps, so pin it before any strategy.make_step/lower_step call
+    import os
+
+    from repro.distributed.base import DONATE_ENV_VAR
+    os.environ[DONATE_ENV_VAR] = args.donate
+
     from repro.kernels import dispatch
     backend = args.backend
     if backend is None and args.use_kernel:
@@ -86,8 +117,10 @@ def main() -> None:
 
     # fail fast on strategy typos too (--mode maps through with a warning)
     strategy = get_strategy(args.strategy, mode=args.mode)
-    log.info("strategy: %s (available: %s), kernel backend: %s",
-             strategy.name, "/".join(available_strategies()), backend)
+    log.info("strategy: %s (available: %s), kernel backend: %s, "
+             "phase_split: %s, dtype: %s (accum %s), donate: %s",
+             strategy.name, "/".join(available_strategies()), backend,
+             args.phase_split, args.dtype, args.accum_dtype, args.donate)
 
     dims = tuple(int(x) for x in args.dims.split(","))
     tensor = planted_tensor(dims, args.nnz, rank=args.rank,
@@ -97,7 +130,8 @@ def main() -> None:
     cfg = FastTuckerConfig(
         dims=dims, ranks=(args.rank,) * len(dims),
         core_rank=args.core_rank, batch_size=args.batch,
-        backend=backend,
+        backend=backend, phase_split=args.phase_split,
+        dtype=args.dtype, accum_dtype=args.accum_dtype,
     )
 
     mesh = make_host_mesh() if strategy.needs_mesh else None

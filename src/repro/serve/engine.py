@@ -110,7 +110,7 @@ def load_params_from_checkpoint(
 
 @partial(jax.jit, static_argnames=("mode", "true_dims"))
 def _reconstruct_bucket(tables, ids, mode, true_dims):
-    """Factored slice reconstruction: (B, *dims except mode)."""
+    """Factored slice reconstruction: (B, *dims except mode), f32 accum."""
     N = len(tables)
     rows = tables[mode][ids]                       # (B, R)
     letters = "abcdefghijklmnop"
@@ -122,18 +122,21 @@ def _reconstruct_bucket(tables, ids, mode, true_dims):
         operands.append(tables[n][: true_dims[n]])
         subs.append(f"{letters[n]}r")
         out += letters[n]
-    return jnp.einsum(",".join(subs) + "->" + out, *operands)
+    return jnp.einsum(",".join(subs) + "->" + out, *operands,
+                      preferred_element_type=jnp.float32)
 
 
 @partial(jax.jit, static_argnames=("mode", "target", "k", "true_target_dim"))
 def _top_k_bucket(tables, colsums, ids, mode, target, k, true_target_dim):
     """(scores, item ids): rank ``target``-mode entries for each ``ids`` row,
-    remaining modes marginalized by their column sums."""
+    remaining modes marginalized by their column sums (f32 scores even for
+    bf16 tables — the colsums are kept f32 and the dot accumulates f32)."""
     w = tables[mode][ids]                          # (B, R)
     for n in range(len(tables)):
         if n not in (mode, target):
             w = w * colsums[n][None, :]
-    scores = w @ tables[target][:true_target_dim].T    # (B, I_target)
+    scores = jnp.matmul(w, tables[target][:true_target_dim].T,
+                        preferred_element_type=jnp.float32)  # (B, I_target)
     return jax.lax.top_k(scores, k)
 
 
@@ -160,6 +163,14 @@ class TuckerServer:
     donate : "auto" | bool
         Donate the padded index buffer into the hot loop. "auto" enables
         it off-CPU only (CPU XLA cannot donate and would warn per call).
+    table_dtype : str | None
+        Storage dtype for the cached C^(n) tables (and the synthetic
+        identity core factors). ``None`` keeps the params' dtype — so
+        bf16-trained checkpoints serve bf16 tables automatically;
+        ``"bfloat16"`` halves the table memory of f32-trained params.
+        The tables are always COMPUTED with f32 accumulation and only
+        stored rounded; every query contraction re-accumulates in f32,
+        so predictions/scores come back f32 regardless.
     """
 
     def __init__(
@@ -171,6 +182,7 @@ class TuckerServer:
         max_bucket: int = DEFAULT_MAX_BUCKET,
         min_bucket: int = DEFAULT_MIN_BUCKET,
         donate: str | bool = "auto",
+        table_dtype: str | None = None,
     ):
         self.backend = dispatch.resolve_backend_name(backend)
         dispatch.get_backend(self.backend)        # fail fast on typos
@@ -190,12 +202,18 @@ class TuckerServer:
         self.order = N
         self.core_rank = int(R)
         self.ladder = bucket_ladder(max_bucket, min_bucket)
-        dtype = params.factors[0].dtype
+        dtype = jnp.dtype(table_dtype) if table_dtype is not None \
+            else params.factors[0].dtype
+        self.table_dtype = dtype
         self._eyes = tuple(jnp.eye(R, dtype=dtype) for _ in range(N))
 
-        tables = mode_products(params.factors, params.core_factors)
-        # column sums over TRUE rows only — marginalization weights for top_k
-        self._colsums = tuple(t.sum(axis=0) for t in tables)
+        # compute the tables with f32 accumulation, store in table dtype
+        tables32 = mode_products(params.factors, params.core_factors,
+                                 accum_dtype=jnp.float32)
+        # column sums over TRUE rows only — marginalization weights for
+        # top_k; kept f32 (from the unrounded tables) even for bf16 storage
+        self._colsums = tuple(t.sum(axis=0) for t in tables32)
+        tables = tuple(t.astype(dtype) for t in tables32)
 
         if donate == "auto":
             donate = jax.default_backend() != "cpu"
@@ -295,7 +313,9 @@ class TuckerServer:
                   or (indices >= np.asarray(self.dims)).any()):
             raise ValueError(f"indices out of range for dims {self.dims}")
         if B == 0:
-            return jnp.zeros((0,), self._tables[0].dtype)
+            # match the nonempty path: predictions are f32 accum results
+            # even when the tables are stored bf16
+            return jnp.zeros((0,), jnp.float32)
         outs = []
         for padded, n in self._bucketed_chunks(indices):
             if self.mesh is None:
@@ -316,7 +336,7 @@ class TuckerServer:
         ids = self._check_ids(ids, mode)
         if len(ids) == 0:
             other = tuple(d for n, d in enumerate(self.dims) if n != mode)
-            return jnp.zeros((0,) + other, self._tables[0].dtype)
+            return jnp.zeros((0,) + other, jnp.float32)
         outs = [
             _reconstruct_bucket(self._tables, chunk, mode, self.dims)[:n]
             for chunk, n in self._bucketed_chunks(ids)
@@ -340,7 +360,7 @@ class TuckerServer:
             raise ValueError(f"k={k} outside 1..{self.dims[target]}")
         ids = self._check_ids(ids, mode)
         if len(ids) == 0:
-            return (jnp.zeros((0, k), self._tables[0].dtype),
+            return (jnp.zeros((0, k), jnp.float32),
                     jnp.zeros((0, k), jnp.int32))
         scores, items = [], []
         for chunk, n in self._bucketed_chunks(ids):

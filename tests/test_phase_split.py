@@ -1,0 +1,396 @@
+"""Phase-split step + StepIntermediates cache + mixed precision.
+
+Locks in the three contracts of the phase-split work:
+
+  1. PARITY — ``phase_split=True`` is bitwise identical (f32, fixed
+     schedule) to the joint step, for both update orders, on both
+     backends, and through the separately compiled phase programs.
+  2. FLOPs — the HLO cost model (``launch.hlo_analysis.dot_flops``)
+     confirms the cached core phase contains HALF the dot FLOPs of the
+     uncached one and the cached two-program pipeline ≥25 % fewer than
+     the uncached pipeline; at the jaxpr level the Gauss-Seidel
+     phase-split emits < half the dot_generals of the joint form (what
+     the opaque Pallas kernels actually execute).
+  3. PRECISION — bf16 storage / f32 accumulation trains to an RMSE
+     within a tolerance band of the f32 run, while the f32 default stays
+     bitwise-untouched (golden trajectories assert the numbers; here we
+     assert the config plumbing and dtypes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FastTuckerConfig, init_state, rmse_mae, sgd_step
+from repro.core import fasttucker as ft
+from repro.data.synthetic import planted_tensor
+from repro.kernels import dispatch
+from repro.launch.hlo_analysis import analyze
+
+BACKENDS = ("xla", "pallas_interpret")
+DIMS = (40, 32, 24)
+
+
+@pytest.fixture(scope="module")
+def tensor():
+    return planted_tensor(DIMS, 4000, rank=4, core_rank=4, noise=0.05,
+                          seed=13)
+
+
+def _cfg(**kw):
+    base = dict(dims=DIMS, ranks=(4, 4, 4), core_rank=4, batch_size=256)
+    base.update(kw)
+    return FastTuckerConfig(**base)
+
+
+def _run(tensor, cfg, steps=5):
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    for i in range(steps):
+        state = sgd_step(state, jax.random.PRNGKey(100 + i),
+                         tensor.indices, tensor.values, cfg)
+    return state
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# 1. parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("order", ["jacobi", "gauss_seidel"])
+def test_phase_split_bitwise_equals_joint(tensor, backend, order):
+    """f32, fixed schedule: the cached two-phase step IS the joint step."""
+    joint = _run(tensor, _cfg(backend=backend, update_order=order))
+    split = _run(tensor, _cfg(backend=backend, update_order=order,
+                              phase_split=True))
+    _assert_tree_equal(joint.params, split.params)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_phase_programs_bitwise_equal_fused_step(tensor, backend):
+    """factor_phase_step ∘ core_phase_step == one fused joint sgd_step."""
+    cfg = _cfg(backend=backend)
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(7)
+    joint = sgd_step(state, key, tensor.indices, tensor.values, cfg)
+    st1, idx, val, inter = ft.factor_phase_step(
+        state, key, tensor.indices, tensor.values, cfg)
+    split = ft.core_phase_step(st1, idx, val, cfg, inter)
+    _assert_tree_equal(joint.params, split.params)
+    assert int(split.step) == int(joint.step) == 1
+
+
+def test_intermediates_match_forward_quantities(tensor):
+    """The emitted cache holds exactly the joint kernel's c/pred/err."""
+    cfg = _cfg()
+    params = init_state(jax.random.PRNGKey(1), cfg).params
+    idx, val = tensor.indices[:256], tensor.values[:256]
+    _, inter = ft.factor_phase_gradients(
+        params, idx, val, cfg.lambda_a, cfg.lambda_b, backend=cfg.backend)
+    joint = ft.batch_gradients(params, idx, val, cfg.lambda_a,
+                               cfg.lambda_b, backend=cfg.backend)
+    np.testing.assert_array_equal(np.asarray(inter.pred),
+                                  np.asarray(joint.pred))
+    np.testing.assert_array_equal(np.asarray(inter.err),
+                                  np.asarray(joint.err))
+    assert len(inter.c) == cfg.order
+    for n in range(cfg.order):
+        want = inter.rows[n] @ params.core_factors[n]
+        np.testing.assert_allclose(np.asarray(inter.c[n]),
+                                   np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_phase_gradient_pair_equals_joint_gradients(tensor, backend):
+    """factor+core phase gradients (cache handed across) == joint call."""
+    cfg = _cfg(backend=backend)
+    params = init_state(jax.random.PRNGKey(2), cfg).params
+    idx, val = tensor.indices[:256], tensor.values[:256]
+    joint = ft.batch_gradients(params, idx, val, 0.01, 0.02,
+                               backend=backend)
+    fg, inter = ft.factor_phase_gradients(params, idx, val, 0.01, 0.02,
+                                          backend=backend)
+    cg = ft.core_phase_gradients(params, idx, val, 0.01, 0.02,
+                                 backend=backend, intermediates=inter)
+    assert fg.core_grads == () and cg.row_grads == ()
+    _assert_tree_equal(joint.row_grads, fg.row_grads)
+    _assert_tree_equal(joint.core_grads, cg.core_grads)
+
+
+def test_step_gradients_routes_by_config(tensor):
+    cfg_joint = _cfg()
+    cfg_split = _cfg(phase_split=True)
+    params = init_state(jax.random.PRNGKey(3), cfg_joint).params
+    idx, val = tensor.indices[:128], tensor.values[:128]
+    g1 = ft.step_gradients(params, idx, val, cfg_joint)
+    g2 = ft.step_gradients(params, idx, val, cfg_split)
+    _assert_tree_equal(g1, g2)
+
+
+# ---------------------------------------------------------------------------
+# 2. FLOPs: the cache is a real reduction, verified at the HLO level
+# ---------------------------------------------------------------------------
+
+def _dot_flops(compiled) -> float:
+    return analyze(compiled.as_text())["dot_flops"]
+
+
+def test_hlo_cached_core_phase_half_the_dot_flops(tensor):
+    """Separately compiled programs (no cross-program CSE): consuming the
+    cache removes the N mode-product dots from the core phase — 50 % —
+    and ≥25 % of the whole two-program step, per epoch and per step."""
+    cfg = _cfg(batch_size=512)
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    fac = ft.factor_phase_step.lower(
+        state, key, tensor.indices, tensor.values, cfg).compile()
+    st1, idx, val, inter = ft.factor_phase_step(
+        state, key, tensor.indices, tensor.values, cfg)
+    cached = ft.core_phase_step.lower(st1, idx, val, cfg, inter).compile()
+    uncached = ft.core_phase_step.lower(st1, idx, val, cfg, None).compile()
+
+    d_fac, d_c, d_u = (_dot_flops(x) for x in (fac, cached, uncached))
+    assert d_c <= 0.55 * d_u, (d_c, d_u)
+    # pipeline (== per-epoch, every step repeats it): ≥25 % fewer dots
+    assert d_fac + d_c <= 0.78 * (d_fac + d_u), (d_fac, d_c, d_u)
+
+
+def test_hlo_phase_split_fused_step_no_dot_regression(tensor):
+    """The fused phase-split step compiles to exactly the joint step's
+    dot FLOPs — restructuring adds no hidden recompute."""
+    state = init_state(jax.random.PRNGKey(0), _cfg())
+    key = jax.random.PRNGKey(1)
+    dots = {}
+    for split in (False, True):
+        cfg = _cfg(phase_split=split)
+        dots[split] = _dot_flops(sgd_step.lower(
+            state, key, tensor.indices, tensor.values, cfg).compile())
+    assert dots[True] == pytest.approx(dots[False])
+
+
+def _count_jaxpr_dots(jaxpr) -> int:
+    """dot_general eqns incl. inside pallas_call/pjit sub-jaxprs — the
+    pre-optimization count, i.e. what an opaque kernel really executes."""
+    total = 0
+    eqns = jaxpr.jaxpr.eqns if hasattr(jaxpr, "jaxpr") else jaxpr.eqns
+    for eqn in eqns:
+        if eqn.primitive.name == "dot_general":
+            total += 1
+        for v in eqn.params.values():
+            items = v if isinstance(v, (tuple, list)) else (v,)
+            for item in items:
+                if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                    total += _count_jaxpr_dots(item)
+    return total
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_gauss_seidel_phase_split_emits_fraction_of_dots(tensor, backend):
+    """GS joint re-runs the full fused gradient pass per mode (3N dots
+    each, N+1 passes); the cached split emits 4N: < half the dots.  On
+    the Pallas backends this is the count the kernels actually execute
+    (pallas_call bodies are opaque to XLA CSE/DCE)."""
+    state = init_state(jax.random.PRNGKey(0), _cfg())
+    key = jax.random.PRNGKey(1)
+    counts = {}
+    for split in (False, True):
+        cfg = _cfg(update_order="gauss_seidel", phase_split=split,
+                   backend=backend)
+        jaxpr = jax.make_jaxpr(
+            lambda s, k, i, v: sgd_step(s, k, i, v, cfg)
+        )(state, key, tensor.indices, tensor.values)
+        counts[split] = _count_jaxpr_dots(jaxpr)
+    assert counts[True] < 0.5 * counts[False], counts
+
+
+# ---------------------------------------------------------------------------
+# 3. mixed precision (bf16 storage / f32 accumulate)
+# ---------------------------------------------------------------------------
+
+def test_bf16_storage_dtypes_and_f32_grads(tensor):
+    cfg = _cfg(dtype="bfloat16")
+    state = init_state(jax.random.PRNGKey(0), cfg)
+    for leaf in jax.tree.leaves(state.params):
+        assert leaf.dtype == jnp.bfloat16
+    grads = ft.batch_gradients(state.params, tensor.indices[:128],
+                               tensor.values[:128], 0.01, 0.02,
+                               accum_dtype=cfg.accum_dtype)
+    for leaf in jax.tree.leaves(grads):
+        assert leaf.dtype == jnp.float32  # every accumulator stays f32
+    after = sgd_step(state, jax.random.PRNGKey(1), tensor.indices,
+                     tensor.values, cfg)
+    for leaf in jax.tree.leaves(after.params):
+        assert leaf.dtype == jnp.bfloat16  # updates round back to storage
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bf16_rmse_within_band_of_f32(tensor, backend):
+    """Tolerance-banded accuracy parity: bf16 parameter STORAGE (no f32
+    master copy — 8-bit mantissa rounds away relative updates < 2⁻⁹)
+    still converges, to an RMSE within a 1.6× band of the f32 run and
+    far below the initial error."""
+    cfg0 = _cfg(backend=backend)
+    r_init, _ = rmse_mae(init_state(jax.random.PRNGKey(0), cfg0).params,
+                         tensor, ft.predict)
+    rmse = {}
+    for dtype in ("float32", "bfloat16"):
+        cfg = _cfg(backend=backend, dtype=dtype)
+        state = _run(tensor, cfg, steps=150)
+        r, _ = rmse_mae(state.params, tensor, ft.predict)
+        rmse[dtype] = float(r)
+    assert not np.isnan(rmse["bfloat16"])
+    assert rmse["bfloat16"] <= 1.6 * rmse["float32"] + 0.02, rmse
+    assert rmse["bfloat16"] <= 0.35 * float(r_init), (rmse, float(r_init))
+
+
+def test_bf16_phase_split_matches_bf16_joint(tensor):
+    """The cache round-trips the SAME f32 intermediates either way, so
+    phase-split parity holds bitwise under bf16 storage too."""
+    joint = _run(tensor, _cfg(dtype="bfloat16"))
+    split = _run(tensor, _cfg(dtype="bfloat16", phase_split=True))
+    _assert_tree_equal(joint.params, split.params)
+
+
+def test_f32_default_unchanged_guard():
+    """Config guard: the defaults that golden trajectories depend on."""
+    cfg = _cfg()
+    assert cfg.dtype == "float32" and cfg.accum_dtype == "float32"
+    assert cfg.phase_split is False
+    with pytest.raises(ValueError, match="dtype"):
+        _cfg(dtype="float16")
+    with pytest.raises(ValueError, match="accum_dtype"):
+        _cfg(accum_dtype="bfloat16")
+
+
+def test_predict_accumulates_f32_for_bf16_params(tensor):
+    cfg = _cfg(dtype="bfloat16")
+    params = init_state(jax.random.PRNGKey(0), cfg).params
+    for backend in BACKENDS:
+        pred = ft.predict(params, tensor.indices[:64], backend=backend)
+        assert pred.dtype == jnp.float32
+    # and the two backends agree on the SAME bf16 inputs
+    p1 = ft.predict(params, tensor.indices[:64], backend="xla")
+    p2 = ft.predict(params, tensor.indices[:64],
+                    backend="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# satellite: single gather in sampled_loss; bench schema; serve tables
+# ---------------------------------------------------------------------------
+
+def test_sampled_loss_single_gather(tensor):
+    """The loss gathers each factor ONCE (shared by prediction + reg)."""
+    cfg = _cfg()
+    params = init_state(jax.random.PRNGKey(0), cfg).params
+    idx, val = tensor.indices[:128], tensor.values[:128]
+    jaxpr = jax.make_jaxpr(
+        lambda p: ft.sampled_loss(p, idx, val, 0.01, 0.02)
+    )(params)
+    # count FACTOR-ROW gathers (operand shape (I_n, J_n)) — the reversed
+    # cumprod inside exclusive_products also lowers to a gather, which is
+    # not a memory-traffic duplicate
+    factor_shapes = {tuple(f.shape) for f in params.factors}
+    gathers = sum(
+        1 for eqn in jaxpr.jaxpr.eqns
+        if eqn.primitive.name == "gather"
+        and tuple(eqn.invars[0].aval.shape) in factor_shapes)
+    assert gathers == cfg.order, jaxpr  # one per mode, not two
+
+
+def test_sampled_loss_grad_unchanged_by_gather_fix(tensor):
+    """Autodiff through the shared gather still matches the hand grads."""
+    cfg = _cfg()
+    params = init_state(jax.random.PRNGKey(4), cfg).params
+    idx, val = tensor.indices[:64], tensor.values[:64]
+    g_auto = jax.grad(
+        lambda p: ft.sampled_loss(p, idx, val, 0.01, 0.02))(params)
+    g_hand = ft.batch_gradients(params, idx, val, 0.01, 0.02)
+    dense = ft.scatter_row_grads(params.factors, idx, g_hand.row_grads)
+    for n in range(cfg.order):
+        np.testing.assert_allclose(np.asarray(g_auto.factors[n]),
+                                   np.asarray(dense[n]), rtol=3e-4,
+                                   atol=1e-5)
+
+
+def test_bench_step_schema_roundtrip():
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+    from benchmarks.common import validate_bench_step
+
+    doc = {
+        "schema": "bench_step/v1",
+        "config": {"dims": [4, 4, 4], "nnz": 10, "rank": 2,
+                   "core_rank": 2, "batch": 8},
+        "results": [{"backend": "xla", "dtype": "float32",
+                     "update_order": "jacobi", "mode": "joint",
+                     "us_per_step": 1.0}],
+    }
+    validate_bench_step(doc)  # must not raise
+    for breakage in (
+        {"schema": "bench_step/v0"},
+        {"results": []},
+        {"results": [{"backend": "xla"}]},
+    ):
+        with pytest.raises(ValueError):
+            validate_bench_step({**doc, **breakage})
+
+
+def test_committed_bench_step_json_is_valid():
+    """The canonical perf-trajectory file at the repo root stays valid."""
+    import json
+    import pathlib
+    import sys
+    root = pathlib.Path(__file__).parent.parent
+    sys.path.insert(0, str(root))
+    from benchmarks.common import validate_bench_step
+
+    path = root / "BENCH_step.json"
+    assert path.exists(), "BENCH_step.json missing at the repo root"
+    doc = json.loads(path.read_text())
+    validate_bench_step(doc)
+    modes = {r["mode"] for r in doc["results"]}
+    assert {"joint", "phase_split", "two_phase",
+            "two_phase_cached"} <= modes
+
+
+def test_serve_bf16_tables_tolerance(tensor):
+    """bf16 serving tables answer within a bf16 band of the f32 engine."""
+    from repro.serve import TuckerServer
+
+    cfg = _cfg()
+    params = init_state(jax.random.PRNGKey(5), cfg).params
+    f32 = TuckerServer(params)
+    b16 = TuckerServer(params, table_dtype="bfloat16")
+    assert b16.table_dtype == jnp.bfloat16
+    assert all(t.dtype == jnp.bfloat16 for t in b16._tables)
+    idx = np.asarray(tensor.indices[:200], np.int32)
+    p32 = np.asarray(f32.predict(idx))
+    p16 = np.asarray(b16.predict(idx))
+    assert p16.dtype == np.float32  # f32 accum results off bf16 tables
+    scale = np.abs(p32).max() + 1e-6
+    np.testing.assert_allclose(p16, p32, atol=0.05 * scale, rtol=0.05)
+    # top_k ordering stays consistent for well-separated scores
+    s32, i32 = f32.top_k(0, idx[:8, 0], k=3)
+    s16, i16 = b16.top_k(0, idx[:8, 0], k=3)
+    assert np.asarray(s16).dtype == np.float32
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s32),
+                               atol=0.05 * float(np.abs(s32).max() + 1),
+                               rtol=0.05)
+
+
+def test_bf16_params_serve_bf16_tables_by_default(tensor):
+    from repro.serve import TuckerServer
+
+    cfg = _cfg(dtype="bfloat16")
+    params = init_state(jax.random.PRNGKey(6), cfg).params
+    srv = TuckerServer(params)
+    assert all(t.dtype == jnp.bfloat16 for t in srv._tables)
+    pred = srv.predict(np.asarray(tensor.indices[:16], np.int32))
+    assert np.asarray(pred).dtype == np.float32
