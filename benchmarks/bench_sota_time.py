@@ -17,11 +17,23 @@ every kernel backend × storage dtype × step mode:
     ``two_phase_cached`` same two programs, core phase consuming the
                          cached intermediates (25 % fewer dot FLOPs —
                          see the HLO assertion in tests/test_phase_split)
+    ``sorted``           ``cfg.sorted_batches=True``: mode-sorted batch
+                         layout — deduplicated row gather + the
+                         ``segment_reduce`` scatter
+    ``onehot_scatter``   (xla only) the joint step with the factor-row
+                         scatter routed through a dense one-hot MXU
+                         matmul — the ``scatter_accum``-EQUIVALENT
+                         baseline, i.e. what the Pallas unsorted fallback
+                         pays, expressed on the xla backend so the
+                         sorted-vs-dense-sweep comparison is
+                         apples-to-apples within one backend
 
-plus a gauss_seidel joint-vs-phase-split pair (where the cache also
-collapses the per-mode recompute), and writes the machine-readable
-``BENCH_step.json`` (schema ``bench_step/v1``, ``common.
-validate_bench_step``) that records the perf trajectory at the repo root.
+plus gauss_seidel joint / phase_split / sorted rows, and writes the
+machine-readable ``BENCH_step.json`` (schema ``bench_step/v2``,
+``common.validate_bench_step``) that records the perf trajectory at the
+repo root.  v2 also stamps every non-joint row with its
+``speedup_vs_joint`` so per-pair regressions (e.g. xla/f32 phase_split
+vs joint) are visible in the document itself.
 
     PYTHONPATH=src python -m benchmarks.bench_sota_time \
         --step-sweep [--smoke] [--out BENCH_step.json]
@@ -38,8 +50,12 @@ from repro.core import FastTuckerConfig, init_state, sgd_step
 from repro.core import als, ccd, cutucker as cu
 from repro.core import fasttucker as ft
 from repro.data.synthetic import planted_tensor
+from repro.kernels import dispatch
 
-from .common import BENCH_STEP_SCHEMA, row, time_call, validate_bench_step
+from .common import (
+    BENCH_STEP_SCHEMA, BENCH_STEP_SPEEDUP_FIELD, row, time_call,
+    validate_bench_step,
+)
 
 DIMS = (4802, 1777, 218)      # Netflix / 100 per mode
 NNZ = 500_000
@@ -114,14 +130,63 @@ SMOKE_J = 4
 SMOKE_BATCH = 512
 
 
-def _time_step_modes(tensor, cfg_kw: dict, iters: int) -> dict[str, float]:
-    """us/step for the four step modes under one (backend, dtype) point."""
-    key = jax.random.PRNGKey(0)
+class _XlaOneHotBackend(dispatch.XlaBackend):
+    """xla with the factor-row scatter as a dense one-hot MXU matmul.
+
+    The ``scatter_accum``-equivalent baseline: the O(rows×B) sweep the
+    Pallas unsorted fallback kernel executes, expressed with jnp ops so
+    the ``sorted`` mode can be compared against the dense sweep WITHIN
+    the xla backend (registered only by the benchmark; never a default).
+    """
+
+    name = "xla_onehot"
+
+    def scatter_accum(self, grads, idx, num_rows):
+        onehot = (jnp.arange(num_rows, dtype=idx.dtype)[:, None]
+                  == idx[None, :]).astype(grads.dtype)
+        return jax.lax.dot_general(
+            onehot, grads, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(grads.dtype)
+
+
+def _ensure_onehot_backend() -> None:
+    if "xla_onehot" not in dispatch.available_backends():
+        dispatch.register_backend(_XlaOneHotBackend())
+
+
+# the fused-step modes timed for BOTH update orders (the two-program and
+# onehot_scatter modes below are jacobi-only)
+FUSED_STEP_MODES = (
+    ("joint", {}),
+    ("phase_split", {"phase_split": True}),
+    ("sorted", {"sorted_batches": True}),
+)
+
+
+def _time_fused_modes(tensor, cfg_kw: dict, iters: int) -> dict[str, float]:
+    """us/step for each fused mode under one (backend, dtype, order)."""
     times = {}
-    for split in (False, True):
-        cfg = FastTuckerConfig(phase_split=split, **cfg_kw)
+    for mode, mode_kw in FUSED_STEP_MODES:
+        cfg = FastTuckerConfig(**{**cfg_kw, **mode_kw})
+        state = init_state(jax.random.PRNGKey(0), cfg)
+        times[mode] = time_call(
+            lambda: sgd_step(state, jax.random.PRNGKey(0), tensor.indices,
+                             tensor.values, cfg),
+            iters=iters)
+    return times
+
+
+def _time_step_modes(tensor, cfg_kw: dict, iters: int) -> dict[str, float]:
+    """us/step for the jacobi step modes under one (backend, dtype) point."""
+    key = jax.random.PRNGKey(0)
+    times = _time_fused_modes(tensor, cfg_kw, iters)
+    if cfg_kw.get("backend", "xla") == "xla":
+        # scatter_accum-equivalent dense sweep, xla-expressed (see class)
+        _ensure_onehot_backend()
+        cfg = FastTuckerConfig(**{**cfg_kw, "backend": "xla_onehot"})
         state = init_state(key, cfg)
-        times["phase_split" if split else "joint"] = time_call(
+        times["onehot_scatter"] = time_call(
             lambda: sgd_step(state, key, tensor.indices, tensor.values,
                              cfg),
             iters=iters)
@@ -153,6 +218,13 @@ def derive_step_summary(results: list[dict]) -> dict:
     step.  Within ONE program XLA already CSEs the shared mode products,
     so this ratio is expected ≈1 (it measures restructuring overhead,
     not the cache; values <1 mean the split ran slower).
+    ``sorted_vs_onehot`` — the dense one-hot scatter sweep
+    (``scatter_accum``-equivalent, O(rows×B)) vs the mode-sorted layout
+    (O(B) dedup gather + segmented scatter): the layout's headline win.
+    ``sorted_vs_joint`` — the unsorted segment-sum step vs the sorted
+    one within the same backend (on CPU xla both scatters are
+    memory-bound segment sums, so this mostly prices the per-step
+    argsort; the dense-sweep comparison above is the hardware story).
     """
     by = {(r["backend"], r["dtype"], r["update_order"], r["mode"]):
           r["us_per_step"] for r in results}
@@ -160,7 +232,9 @@ def derive_step_summary(results: list[dict]) -> dict:
                     "two_phase_cached (same programs, cache on/off); "
                     "fused_split_vs_joint compares the single-program "
                     "forms where XLA CSE already shares the mode "
-                    "products and ≈1 is expected")}
+                    "products and ≈1 is expected; sorted_vs_onehot is "
+                    "the dense O(rows×B) scatter_accum-equivalent sweep "
+                    "vs the O(B) mode-sorted layout")}
     for (backend, dtype, order, mode), us in sorted(by.items()):
         if order != "jacobi":
             continue
@@ -174,7 +248,27 @@ def derive_step_summary(results: list[dict]) -> dict:
             if split:
                 out[f"fused_split_vs_joint/{backend}/{dtype}"] = round(
                     us / split, 3)
+            srt = by.get((backend, dtype, order, "sorted"))
+            if srt:
+                out[f"sorted_vs_joint/{backend}/{dtype}"] = round(
+                    us / srt, 3)
+        elif mode == "onehot_scatter":
+            srt = by.get((backend, dtype, order, "sorted"))
+            if srt:
+                out[f"sorted_vs_onehot/{backend}/{dtype}"] = round(
+                    us / srt, 3)
     return out
+
+
+def _stamp_speedups(results: list[dict]) -> None:
+    """v2: every non-joint row carries speedup_vs_joint (>1 = faster)."""
+    joint = {(r["backend"], r["dtype"], r["update_order"]): r["us_per_step"]
+             for r in results if r["mode"] == "joint"}
+    for r in results:
+        if r["mode"] == "joint":
+            continue
+        base = joint[(r["backend"], r["dtype"], r["update_order"])]
+        r[BENCH_STEP_SPEEDUP_FIELD] = round(base / r["us_per_step"], 4)
 
 
 def run_step_sweep(smoke: bool = False,
@@ -205,20 +299,15 @@ def run_step_sweep(smoke: bool = False,
                 })
                 row(f"step/{backend}/{dtype}/jacobi/{mode}", us,
                     f"{us / base:.2f}x" if base else "1.00x")
-            # gauss_seidel pair: where the cache also collapses the
-            # per-mode recompute (3N(N+1) → 4N in-kernel dots on Pallas)
+            # gauss_seidel rows: the cache collapses the per-mode
+            # recompute (3N(N+1) → 4N in-kernel dots on Pallas), and the
+            # sorted layout pays its per-mode scatter N+1 times per step
             gs_kw = dict(cfg_kw, update_order="gauss_seidel")
             gs_base = None
-            for split in (False, True):
-                cfg = FastTuckerConfig(phase_split=split, **gs_kw)
-                state = init_state(jax.random.PRNGKey(0), cfg)
-                us = time_call(
-                    lambda: sgd_step(state, jax.random.PRNGKey(0),
-                                     tensor.indices, tensor.values, cfg),
-                    iters=iters)
+            for mode, us in _time_fused_modes(tensor, gs_kw,
+                                              iters).items():
                 if gs_base is None:
                     gs_base = us
-                mode = "phase_split" if split else "joint"
                 results.append({
                     "backend": backend, "dtype": dtype,
                     "update_order": "gauss_seidel", "mode": mode,
@@ -226,6 +315,7 @@ def run_step_sweep(smoke: bool = False,
                 })
                 row(f"step/{backend}/{dtype}/gauss_seidel/{mode}", us,
                     f"{us / gs_base:.2f}x")
+    _stamp_speedups(results)
     doc = {
         "schema": BENCH_STEP_SCHEMA,
         "generated_by": "benchmarks.bench_sota_time.run_step_sweep",

@@ -5,16 +5,24 @@ import time
 
 import jax
 
-BENCH_STEP_SCHEMA = "bench_step/v1"
+BENCH_STEP_SCHEMA = "bench_step/v2"
 
 # every result row must carry exactly these fields
 BENCH_STEP_ROW_FIELDS = {
     "backend": str,        # kernel backend name (repro.kernels.dispatch)
     "dtype": str,          # parameter storage dtype
     "update_order": str,   # jacobi | gauss_seidel
-    "mode": str,           # joint | phase_split | two_phase | two_phase_cached
+    "mode": str,           # joint | phase_split | two_phase |
+                           # two_phase_cached | sorted | onehot_scatter
     "us_per_step": float,  # median wall time per full training step
 }
+
+# v2: every non-joint row additionally carries its speedup against the
+# joint row of the same (backend, dtype, update_order) — >1 means the
+# mode is FASTER than joint.  This is the per-pair field that makes
+# regressions like xla/f32 phase_split-slower-than-joint visible in the
+# document itself instead of requiring a reader to divide rows.
+BENCH_STEP_SPEEDUP_FIELD = "speedup_vs_joint"
 
 
 def validate_bench_step(doc: dict) -> None:
@@ -22,6 +30,9 @@ def validate_bench_step(doc: dict) -> None:
 
     The contract CI's bench-smoke step (and tests) hold the emitted JSON
     to, so the recorded perf trajectory stays machine-readable across PRs.
+    Schema ``bench_step/v2``: adds the ``sorted`` / ``onehot_scatter``
+    step modes and the required per-pair ``speedup_vs_joint`` field on
+    every non-joint row.
     """
     if not isinstance(doc, dict):
         raise ValueError(f"BENCH_step document must be a dict, "
@@ -49,6 +60,12 @@ def validate_bench_step(doc: dict) -> None:
                     f"got {type(row_[field]).__name__}")
         if row_["us_per_step"] <= 0:
             raise ValueError(f"results[{i}].us_per_step must be > 0")
+        if row_["mode"] != "joint":
+            spd = row_.get(BENCH_STEP_SPEEDUP_FIELD)
+            if not isinstance(spd, float) or spd <= 0:
+                raise ValueError(
+                    f"results[{i}] (mode {row_['mode']!r}) must carry "
+                    f"{BENCH_STEP_SPEEDUP_FIELD!r} as a positive float")
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:

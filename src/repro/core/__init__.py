@@ -6,6 +6,7 @@ from .fasttucker import (
     StepIntermediates,
     TrainState,
     batch_gradients,
+    batch_layout,
     core_phase_step,
     dynamic_lr,
     factor_phase_step,
@@ -18,8 +19,12 @@ from .fasttucker import (
     train,
 )
 from .metrics import rmse_mae
+from .sampling import SortedBatchLayout, sorted_batch_layout
 
 __all__ = [
+    "SortedBatchLayout",
+    "sorted_batch_layout",
+    "batch_layout",
     "SparseTensor",
     "BlockPartition",
     "partition_for_workers",

@@ -44,6 +44,20 @@ MXU dot, the residual, and the revisited core-gradient accumulator stay
 in f32 (``preferred_element_type`` end to end); parameter updates are
 applied in f32 and rounded back to the storage dtype.  The f32 default
 is bit-for-bit the original trajectory.
+
+Mode-sorted batches: ``FastTuckerConfig(sorted_batches=True)`` lays every
+sampled batch out in the order the kernels consume it
+(``core.sampling.sorted_batch_layout``) — cuFasterTucker's pre-sorted
+per-mode slices / P-Tucker's CSF row grouping.  Each unique factor row is
+gathered ONCE per mode and expanded through the inverse index, and the
+row-gradient scatter goes through the ``segment_reduce`` registry op (a
+sorted ``segment_sum`` on "xla", the O(B) segmented walk kernel on the
+Pallas backends) instead of the unsorted ``scatter_accum`` fallback.
+On "xla" the sorted path is bitwise-identical to the unsorted one in f32
+(stable sort ⇒ per-row duplicate order preserved); on the Pallas backends
+it is bitwise-identical to the jnp *reference* scatter — stronger than
+the one-hot ``scatter_accum``, whose in-tile dot tree-reduction is only
+tolerance-equal to that same reference.
 """
 from __future__ import annotations
 
@@ -56,7 +70,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from .sampling import sample_batch_arrays
+from .sampling import (
+    SortedBatchLayout, sample_batch_arrays, sorted_batch_layout,
+)
 from .sptensor import SparseTensor
 
 
@@ -98,6 +114,9 @@ class FastTuckerConfig:
     update_order: str = "jacobi"    # "jacobi" | "gauss_seidel"
     backend: str = "xla"            # kernel backend (repro.kernels.dispatch)
     phase_split: bool = False       # cached two-phase step (StepIntermediates)
+    sorted_batches: bool = False    # mode-sorted layout: dedup gather +
+                                    # segment_reduce scatter (f32-bitwise
+                                    # on "xla"; reference-bitwise on Pallas)
     dtype: str = "float32"          # parameter STORAGE dtype (+"bfloat16")
     accum_dtype: str = "float32"    # MXU dot / gradient accumulation dtype
     use_kernel: dataclasses.InitVar[bool | None] = None  # DEPRECATED shim
@@ -167,11 +186,33 @@ def dynamic_lr(alpha: float, beta: float, t: jax.Array) -> jax.Array:
 # Forward / gradients (batched over the sampling set Ψ)
 # ---------------------------------------------------------------------------
 
+def _gather_mode(
+    f: jax.Array,
+    idx: jax.Array,
+    n: int,
+    layout: SortedBatchLayout | None,
+) -> jax.Array:
+    """Mode n's factor rows, (B, J_n) — plain or dedup form."""
+    if layout is None:
+        return f[idx[:, n]]
+    return f[layout.uniq[n]][layout.inv[n]]
+
+
 def gather_rows(
-    factors: Sequence[jax.Array], idx: jax.Array
+    factors: Sequence[jax.Array],
+    idx: jax.Array,
+    layout: SortedBatchLayout | None = None,
 ) -> tuple[jax.Array, ...]:
-    """A^(n)[idx[:, n]] for each mode → tuple of (B, J_n)."""
-    return tuple(f[idx[:, n]] for n, f in enumerate(factors))
+    """A^(n)[idx[:, n]] for each mode → tuple of (B, J_n).
+
+    With a mode-sorted ``layout`` each UNIQUE row is fetched from the
+    (large, HBM-resident) factor table once and expanded to batch order
+    through the inverse index — a second gather, but from the small
+    (B, J_n) buffer that is already on-chip.  Bitwise-identical either
+    way: gathers move bits, they do no arithmetic.
+    """
+    return tuple(_gather_mode(f, idx, n, layout)
+                 for n, f in enumerate(factors))
 
 
 def _predict_from_rows(
@@ -270,6 +311,7 @@ def batch_gradients(
     row_mean: bool = False,
     backend: str | None = None,
     accum_dtype=None,
+    layout: SortedBatchLayout | None = None,
 ) -> BatchGrads:
     """Fused Eq.13 + Eq.17 gradients for the sampled set (the JOINT pass).
 
@@ -286,7 +328,7 @@ def batch_gradients(
     phase-split flavor with cached intermediates.
     """
     backend = _resolve_backend(backend, use_kernel, "batch_gradients")
-    rows = gather_rows(params.factors, idx)
+    rows = gather_rows(params.factors, idx, layout)
     kg = dispatch.get_backend(backend).kruskal_grad(
         rows, params.core_factors, val,
         mask=mask, lambda_a=lambda_a, lambda_b=lambda_b, row_mean=row_mean,
@@ -305,6 +347,7 @@ def factor_phase_gradients(
     row_mean: bool = False,
     backend: str | None = None,
     accum_dtype=None,
+    layout: SortedBatchLayout | None = None,
 ) -> tuple[BatchGrads, StepIntermediates]:
     """Factor phase: Eq.-13 row gradients + the emitted intermediates.
 
@@ -315,7 +358,7 @@ def factor_phase_gradients(
     ``core_phase_gradients`` call consumes.
     """
     backend = dispatch.resolve_backend_name(backend)
-    rows = gather_rows(params.factors, idx)
+    rows = gather_rows(params.factors, idx, layout)
     kg = dispatch.get_backend(backend).kruskal_grad(
         rows, params.core_factors, val,
         mask=mask, lambda_a=lambda_a, lambda_b=lambda_b, row_mean=row_mean,
@@ -336,6 +379,7 @@ def core_phase_gradients(
     backend: str | None = None,
     accum_dtype=None,
     intermediates: StepIntermediates | None = None,
+    layout: SortedBatchLayout | None = None,
 ) -> BatchGrads:
     """Core phase: Eq.-17 core-factor gradients (``row_grads=()``).
 
@@ -347,7 +391,7 @@ def core_phase_gradients(
     """
     backend = dispatch.resolve_backend_name(backend)
     if intermediates is None:
-        rows = gather_rows(params.factors, idx)
+        rows = gather_rows(params.factors, idx, layout)
         c = None
     else:
         rows, c = intermediates.rows, intermediates.c
@@ -359,12 +403,24 @@ def core_phase_gradients(
     return BatchGrads((), kg.core_grads, kg.err, kg.pred)
 
 
+def batch_layout(
+    idx: jax.Array, cfg: "FastTuckerConfig"
+) -> SortedBatchLayout | None:
+    """The mode-sorted layout of a sampled batch, or ``None`` when the
+    config keeps the unsorted fallback.  Computed device-side inside the
+    jitted step (one stable int argsort per mode) so every caller —
+    ``sgd_step`` and all distributed strategies — threads the layout with
+    one line."""
+    return sorted_batch_layout(idx) if cfg.sorted_batches else None
+
+
 def step_gradients(
     params: FastTuckerParams,
     idx: jax.Array,
     val: jax.Array,
     cfg: "FastTuckerConfig",
     mask: jax.Array | None = None,
+    layout: SortedBatchLayout | None = None,
 ) -> BatchGrads:
     """Config-routed gradients: joint, or the cached two-phase pipeline.
 
@@ -372,16 +428,18 @@ def step_gradients(
     ``FastTuckerConfig(phase_split=True)`` reaches every strategy without
     per-strategy plumbing.  Bitwise identical either way (f32) — the
     phases consume the same ``StepIntermediates`` the joint kernel
-    computes inline.
+    computes inline.  ``layout`` (from ``batch_layout``) switches the
+    gather to the dedup form; pass the same layout to
+    ``scatter_row_grads``.
     """
     if not cfg.phase_split:
         return batch_gradients(
             params, idx, val, cfg.lambda_a, cfg.lambda_b, mask=mask,
-            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
         )
     fg, inter = factor_phase_gradients(
         params, idx, val, cfg.lambda_a, cfg.lambda_b, mask=mask,
-        backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
     )
     cg = core_phase_gradients(
         params, idx, val, cfg.lambda_a, cfg.lambda_b, mask=mask,
@@ -391,21 +449,45 @@ def step_gradients(
     return BatchGrads(fg.row_grads, cg.core_grads, inter.err, inter.pred)
 
 
+def _scatter_mode(
+    bk,
+    grads: jax.Array,
+    idx: jax.Array,
+    n: int,
+    num_rows: int,
+    layout: SortedBatchLayout | None,
+) -> jax.Array:
+    """One mode's dense row-gradient scatter, layout-routed.
+
+    Sorted: permute the per-sample grads into mode-n sorted order and
+    segment-reduce over the now-contiguous runs; unsorted: the
+    ``scatter_accum`` fallback.
+    """
+    if layout is None:
+        return bk.scatter_accum(grads, idx[:, n], num_rows)
+    return bk.segment_reduce(grads[layout.perm[n]], layout.sorted_rows[n],
+                             num_rows)
+
+
 def scatter_row_grads(
     factors: Sequence[jax.Array],
     idx: jax.Array,
     row_grads: Sequence[jax.Array],
     backend: str | None = None,
+    layout: SortedBatchLayout | None = None,
 ) -> tuple[jax.Array, ...]:
     """Σ_b contributions into dense (I_n, J_n) gradients (exact segment sum).
 
-    On the Pallas backends this is the MXU one-hot ``scatter_accum`` kernel;
-    on "xla" it is ``jax.ops.segment_sum`` — identical results.
+    Unsorted: the MXU one-hot ``scatter_accum`` kernel on the Pallas
+    backends, ``jax.ops.segment_sum`` on "xla".  With a mode-sorted
+    ``layout``: the ``segment_reduce`` op over the permuted grads —
+    bitwise-identical on "xla", reference-bitwise on Pallas.
     """
     bk = dispatch.get_backend(backend)
     outs = []
     for n, f in enumerate(factors):
-        outs.append(bk.scatter_accum(row_grads[n], idx[:, n], f.shape[0]))
+        outs.append(_scatter_mode(bk, row_grads[n], idx, n, f.shape[0],
+                                  layout))
     return tuple(outs)
 
 
@@ -441,12 +523,13 @@ def _apply_updates(
     update_factors: bool = True,
     update_core: bool = True,
     backend: str | None = None,
+    layout: SortedBatchLayout | None = None,
 ) -> FastTuckerParams:
     factors = params.factors
     core_factors = params.core_factors
     if update_factors:
         dense = scatter_row_grads(factors, idx, grads.row_grads,
-                                  backend=backend)
+                                  backend=backend, layout=layout)
         factors = tuple(
             _sgd_update(f, lr_a, g) for f, g in zip(factors, dense))
     if update_core:
@@ -458,7 +541,7 @@ def _apply_updates(
 
 
 def _gauss_seidel_joint(params, idx, val, lr_a, lr_b, cfg,
-                        update_factors, update_core):
+                        update_factors, update_core, layout=None):
     """Original GS: one full joint gradient pass per mode (+ one for the
     core).  XLA CSE rescues the recomputed mode products on the "xla"
     backend, but a ``pallas_call`` is opaque — on the Pallas backends
@@ -469,29 +552,28 @@ def _gauss_seidel_joint(params, idx, val, lr_a, lr_b, cfg,
             grads = batch_gradients(
                 params, idx, val, cfg.lambda_a, cfg.lambda_b,
                 backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+                layout=layout,
             )
-            g_n = bk.scatter_accum(
-                grads.row_grads[n], idx[:, n],
-                params.factors[n].shape[0],
-            )
+            g_n = _scatter_mode(bk, grads.row_grads[n], idx, n,
+                                params.factors[n].shape[0], layout)
             new_f = list(params.factors)
             new_f[n] = _sgd_update(params.factors[n], lr_a, g_n)
             params = FastTuckerParams(tuple(new_f), params.core_factors)
     if update_core:
         grads = batch_gradients(
             params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
         )
         params = _apply_updates(
             params, idx, grads, lr_a, lr_b,
             update_factors=False, update_core=True,
-            backend=cfg.backend,
+            backend=cfg.backend, layout=layout,
         )
     return params
 
 
 def _gauss_seidel_phase_split(params, idx, val, lr_a, lr_b, cfg,
-                              update_factors, update_core):
+                              update_factors, update_core, layout=None):
     """GS with invariant-intermediate caching (cuFasterTucker):
 
     Updating mode n leaves every other mode's product c^(k≠n) — and all
@@ -502,7 +584,7 @@ def _gauss_seidel_phase_split(params, idx, val, lr_a, lr_b, cfg,
     the Pallas backends.  Bitwise identical to the joint GS step."""
     bk = dispatch.get_backend(cfg.backend)
     N = cfg.order
-    rows = list(gather_rows(params.factors, idx))
+    rows = list(gather_rows(params.factors, idx, layout))
     c = [bk.mode_dot(rows[n], params.core_factors[n],
                      accum_dtype=cfg.accum_dtype) for n in range(N)]
     if update_factors:
@@ -513,12 +595,12 @@ def _gauss_seidel_phase_split(params, idx, val, lr_a, lr_b, cfg,
                 c=tuple(c), row_modes=(n,), want_core=False,
                 accum_dtype=cfg.accum_dtype,
             )
-            g_n = bk.scatter_accum(
-                kg.row_grads[0], idx[:, n], params.factors[n].shape[0])
+            g_n = _scatter_mode(bk, kg.row_grads[0], idx, n,
+                                params.factors[n].shape[0], layout)
             new_f = list(params.factors)
             new_f[n] = _sgd_update(params.factors[n], lr_a, g_n)
             params = FastTuckerParams(tuple(new_f), params.core_factors)
-            rows[n] = params.factors[n][idx[:, n]]
+            rows[n] = _gather_mode(params.factors[n], idx, n, layout)
             c[n] = bk.mode_dot(rows[n], params.core_factors[n],
                                accum_dtype=cfg.accum_dtype)
     if update_core:
@@ -554,6 +636,7 @@ def sgd_step(
     gauss_seidel: 4N vs 3N(N+1) in-kernel dots).
     """
     idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
+    layout = batch_layout(idx, cfg)
     lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, state.step)
     lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, state.step)
 
@@ -561,21 +644,21 @@ def sgd_step(
         gs = (_gauss_seidel_phase_split if cfg.phase_split
               else _gauss_seidel_joint)
         params = gs(state.params, idx, val, lr_a, lr_b, cfg,
-                    update_factors, update_core)
+                    update_factors, update_core, layout=layout)
     elif cfg.phase_split:
         # jacobi, phased: factor phase emits the intermediates, the core
         # phase consumes them (core grads use the PRE-update rows cached
         # in the intermediates — exactly the joint jacobi semantics)
         fg, inter = factor_phase_gradients(
             state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
         )
         params = state.params
         if update_factors:
             params = _apply_updates(
                 params, idx, fg, lr_a, lr_b,
                 update_factors=True, update_core=False,
-                backend=cfg.backend,
+                backend=cfg.backend, layout=layout,
             )
         if update_core:
             cg = core_phase_gradients(
@@ -586,17 +669,17 @@ def sgd_step(
             params = _apply_updates(
                 params, idx, cg, lr_a, lr_b,
                 update_factors=False, update_core=True,
-                backend=cfg.backend,
+                backend=cfg.backend, layout=layout,
             )
     else:  # jacobi: one fused gradient pass, all variables step together
         grads = batch_gradients(
             state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
-            backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+            backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
         )
         params = _apply_updates(
             state.params, idx, grads, lr_a, lr_b,
             update_factors=update_factors, update_core=update_core,
-            backend=cfg.backend,
+            backend=cfg.backend, layout=layout,
         )
     return TrainState(params, state.step + 1)
 
@@ -622,14 +705,16 @@ def factor_phase_step(
     unchanged here and both phases share the same dynamic LR epoch.
     """
     idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
+    layout = batch_layout(idx, cfg)
     lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, state.step)
     fg, inter = factor_phase_gradients(
         state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
-        backend=cfg.backend, accum_dtype=cfg.accum_dtype,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
     )
     params = _apply_updates(
         state.params, idx, fg, lr_a, jnp.asarray(0.0),
         update_factors=True, update_core=False, backend=cfg.backend,
+        layout=layout,
     )
     return TrainState(params, state.step), idx, val, inter
 
@@ -656,10 +741,11 @@ def core_phase_step(
     recompute baseline.
     """
     lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, state.step)
+    layout = batch_layout(idx, cfg) if intermediates is None else None
     cg = core_phase_gradients(
         state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
         backend=cfg.backend, accum_dtype=cfg.accum_dtype,
-        intermediates=intermediates,
+        intermediates=intermediates, layout=layout,
     )
     params = _apply_updates(
         state.params, idx, cg, jnp.asarray(0.0), lr_b,

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.fasttucker import (
     FastTuckerConfig, FastTuckerParams, TrainState, _sgd_update,
-    dynamic_lr, scatter_row_grads, sgd_step, step_gradients,
+    batch_layout, dynamic_lr, scatter_row_grads, sgd_step, step_gradients,
 )
 from repro.core.sampling import sample_batch_arrays
 from repro.core.sptensor import SparseTensor
@@ -55,9 +55,11 @@ def _build_jitted(plan: LocalPlan):
     def step(dstate: DistState, indices, values) -> DistState:
         key = jax.random.fold_in(dstate.key, dstate.step)
         idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
-        grads = step_gradients(dstate.params, idx, val, cfg)
+        layout = batch_layout(idx, cfg)
+        grads = step_gradients(dstate.params, idx, val, cfg, layout=layout)
         dense = scatter_row_grads(dstate.params.factors, idx,
-                                  grads.row_grads, backend=cfg.backend)
+                                  grads.row_grads, backend=cfg.backend,
+                                  layout=layout)
         dense, ef = compressed_reduce(dense, dstate.ef, axis=None)
         lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, dstate.step)
         lr_b = dynamic_lr(cfg.alpha_b, cfg.beta_b, dstate.step)

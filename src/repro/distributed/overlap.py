@@ -25,11 +25,16 @@ variants compile and are reused every epoch. Trajectories are identical to
 (``fold_in(base, global_step)``), same update expressions — only the
 rotation bookkeeping differs, and rotations are pure data movement.
 
-Phase-split / mixed precision ride through ``stratum_row_update`` (shared
-with ``strata``): ``FastTuckerConfig(phase_split=True)`` routes each
-stratum's gradients through the ``StepIntermediates``-cached two-phase
-kernels, and ``dtype="bfloat16"`` shards/rotates bf16 factor rows — HALF
-the ppermute bytes per rotation — while the gradient psum stays f32.
+Phase-split / mixed precision / mode-sorted batches ride through
+``stratum_row_update`` (shared with ``strata``):
+``FastTuckerConfig(phase_split=True)`` routes each stratum's gradients
+through the ``StepIntermediates``-cached two-phase kernels,
+``dtype="bfloat16"`` shards/rotates bf16 factor rows — HALF the ppermute
+bytes per rotation — while the gradient psum stays f32, and
+``sorted_batches=True`` sorts each device's localized draw per mode
+(dedup gather + ``segment_reduce`` scatter; block localization preserves
+row order, so the sorted layout composes with the rotated shard
+positions).
 """
 from __future__ import annotations
 

@@ -30,7 +30,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fasttucker import (
     FastTuckerConfig, FastTuckerParams, TrainState, _sgd_update,
-    dynamic_lr, scatter_row_grads, step_gradients,
+    batch_layout, dynamic_lr, scatter_row_grads, step_gradients,
 )
 from repro.core.sptensor import SparseTensor, partition_for_workers
 
@@ -123,10 +123,17 @@ def stratum_row_update(cfg: FastTuckerConfig, layout: StrataLayout,
         local_idx.append(idx[:, n] - digit * layout.rows_per_block[n])
     lidx = jnp.stack(local_idx, axis=1)
 
+    # mode-sorted view of this device's draw: localization subtracts a
+    # per-mode constant, so sorting the LOCAL ids is the same order the
+    # global rows have — the layout composes with the rotated block
+    # positions unchanged (masked padding entries may localize negative;
+    # both scatter paths drop out-of-range rows identically)
+    blayout = batch_layout(lidx, cfg)
     lparams = FastTuckerParams(tuple(rot), core_f)
-    grads = step_gradients(lparams, lidx, val, cfg, mask=msk)
+    grads = step_gradients(lparams, lidx, val, cfg, mask=msk,
+                           layout=blayout)
     dense = scatter_row_grads(lparams.factors, lidx, grads.row_grads,
-                              backend=cfg.backend)
+                              backend=cfg.backend, layout=blayout)
     lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, step_no)
     new_rot = tuple(_sgd_update(f, lr_a, g) for f, g in zip(rot, dense))
     return new_rot, grads.core_grads

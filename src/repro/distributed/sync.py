@@ -17,7 +17,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fasttucker import (
     FastTuckerConfig, FastTuckerParams, TrainState, _sgd_update,
-    dynamic_lr, scatter_row_grads, step_gradients,
+    batch_layout, dynamic_lr, scatter_row_grads, step_gradients,
 )
 from repro.core.sampling import sample_batch_arrays
 from repro.core.sptensor import SparseTensor
@@ -54,9 +54,10 @@ def _sync_local_update(cfg: FastTuckerConfig, axis: str, compress: bool,
     me = jax.lax.axis_index(axis)
     key = jax.random.fold_in(key, me)
     idx, val = sample_batch_arrays(key, idx_shard, val_shard, cfg.batch_size)
-    grads = step_gradients(params, idx, val, cfg)
+    layout = batch_layout(idx, cfg)  # per-device mode-sorted view
+    grads = step_gradients(params, idx, val, cfg, layout=layout)
     dense = scatter_row_grads(params.factors, idx, grads.row_grads,
-                              backend=cfg.backend)
+                              backend=cfg.backend, layout=layout)
     if compress:
         dense, ef = compressed_reduce(dense, ef, axis)
     else:

@@ -8,7 +8,15 @@ Layout:
     kruskal_contract.py Theorem-1 forward contraction (Pallas)
     kruskal_grad.py     fused forward + Eq.13/17 gradient pass — the whole
                         per-nonzero pipeline in ONE pallas_call (Pallas)
-    scatter_accum.py    MXU one-hot scatter for factor-row gradients (Pallas)
+    scatter_accum.py    MXU one-hot scatter for factor-row gradients
+                        (Pallas) — the UNSORTED-batch fallback: O(rows×B)
+                        dense sweep, batch order free
+    segment_reduce.py   segmented-reduce scatter for MODE-SORTED batches
+                        (``core.sampling.sorted_batch_layout`` /
+                        ``FastTuckerConfig(sorted_batches=True)``): walks
+                        contiguous batch tiles into the revisited row
+                        block — O(B) adds, zero MXU work, bitwise equal
+                        to the jnp reference (Pallas)
     tucker_matmul.py    Tucker-2 factorized dense layer (Pallas)
     flash_attention.py  flash attention for the LM workload (Pallas)
     ref.py              pure-jnp oracles for every kernel (test ground truth)

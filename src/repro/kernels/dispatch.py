@@ -24,7 +24,14 @@ Ops per backend:
     ``kruskal_grad``      fused forward + Eq.13/17 gradients (cuFasterTucker
                           style single-pass; one ``pallas_call`` on the
                           Pallas backends)
-    ``scatter_accum``     factor-row segment-sum scatter
+    ``scatter_accum``     factor-row segment-sum scatter (unsorted batches;
+                          O(rows×B) one-hot MXU sweep on Pallas)
+    ``segment_reduce``    factor-row scatter for MODE-SORTED batches
+                          (``core.sampling.sorted_batch_layout``): a sorted
+                          ``segment_sum`` on "xla", the O(B) segmented
+                          walk kernel (``kernels.segment_reduce``) on the
+                          Pallas backends; ``scatter_accum`` stays the
+                          unsorted fallback
     ``tucker_matmul``     Tucker-2 factorized dense layer
 
 New accelerator targets (Triton, CUDA, …) register via
@@ -197,6 +204,16 @@ class XlaBackend:
     ) -> jax.Array:
         return jax.ops.segment_sum(grads, idx, num_segments=num_rows)
 
+    def segment_reduce(
+        self, grads: jax.Array, idx: jax.Array, num_rows: int
+    ) -> jax.Array:
+        """Sorted-batch scatter: ``grads``/``idx`` are in mode-sorted order
+        (duplicates adjacent, batch order preserved by the stable sort), so
+        the segment sum accumulates contiguous runs — bitwise-identical to
+        the unsorted ``scatter_accum`` in f32."""
+        return jax.ops.segment_sum(grads, idx, num_segments=num_rows,
+                                   indices_are_sorted=True)
+
     def tucker_matmul(self, x, u1, g, u2) -> jax.Array:
         return ((x @ u1) @ g) @ u2.T
 
@@ -320,6 +337,14 @@ class PallasBackend:
             block_i=self.block_i, block_b=self.block_b,
             interpret=self.interpret,
         )
+
+    def segment_reduce(
+        self, grads: jax.Array, idx: jax.Array, num_rows: int
+    ) -> jax.Array:
+        from .segment_reduce import segment_reduce as sr
+
+        return sr(grads, idx, num_rows, block_b=self.block_b,
+                  interpret=self.interpret)
 
     def tucker_matmul(self, x, u1, g, u2) -> jax.Array:
         from .tucker_matmul import tucker_matmul as tm

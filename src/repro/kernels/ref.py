@@ -86,8 +86,24 @@ def scatter_accum_ref(
     idx: jax.Array,     # (B,)  target rows
     num_rows: int,
 ) -> jax.Array:
-    """Exact segment-sum scatter into (num_rows, J)."""
+    """Exact segment-sum scatter into (num_rows, J) (unsorted fallback)."""
     return jax.ops.segment_sum(grads, idx, num_segments=num_rows)
+
+
+def segment_reduce_ref(
+    grads: jax.Array,   # (B, J) row grads permuted to mode-sorted order
+    idx: jax.Array,     # (B,)  SORTED target rows (duplicates adjacent)
+    num_rows: int,
+) -> jax.Array:
+    """Oracle for the sorted segmented-reduce scatter kernel.
+
+    Same mathematical result as ``scatter_accum_ref`` of the unpermuted
+    inputs — and bitwise-identical to it in f32 when the sort permutation
+    is stable (duplicates stay in batch order, so each row's values are
+    summed in the same order).
+    """
+    return jax.ops.segment_sum(grads, idx, num_segments=num_rows,
+                               indices_are_sorted=True)
 
 
 def tucker_matmul_ref(

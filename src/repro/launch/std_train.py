@@ -19,7 +19,11 @@ CPU-testable kernels; default resolves ``$REPRO_KERNEL_BACKEND`` then
 
 ``--phase-split`` routes every strategy's step through the
 ``StepIntermediates``-cached two-phase update (bitwise identical in f32,
-fewer real kernel dots on the Pallas backends); ``--dtype bfloat16``
+fewer real kernel dots on the Pallas backends); ``--sorted-batches``
+switches every strategy to the mode-sorted batch layout (deduplicated
+row gather + segmented-reduce scatter — f32-bitwise on xla, and on the
+Pallas backends replaces the O(rows×B) one-hot scatter sweep with the
+O(B) ``segment_reduce`` kernel); ``--dtype bfloat16``
 stores factors/core factors in bf16 with f32 MXU accumulation
 (``--accum-dtype``); ``--donate on`` (default ``auto``: off-CPU only)
 donates the step's DistState buffers into the compiled update so XLA
@@ -77,6 +81,12 @@ def main() -> None:
                     help="two-phase factor/core step with the "
                          "StepIntermediates cache (bitwise-identical "
                          "numerics; fewer real kernel dots on Pallas)")
+    ap.add_argument("--sorted-batches", action="store_true",
+                    help="mode-sorted batch layout: gather each unique "
+                         "factor row once and scatter through the "
+                         "segmented-reduce op (f32-bitwise on xla; "
+                         "replaces the O(rows×B) one-hot sweep on the "
+                         "Pallas backends)")
     ap.add_argument("--dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="parameter storage dtype (bf16 halves parameter "
@@ -118,9 +128,11 @@ def main() -> None:
     # fail fast on strategy typos too (--mode maps through with a warning)
     strategy = get_strategy(args.strategy, mode=args.mode)
     log.info("strategy: %s (available: %s), kernel backend: %s, "
-             "phase_split: %s, dtype: %s (accum %s), donate: %s",
+             "phase_split: %s, sorted_batches: %s, dtype: %s (accum %s), "
+             "donate: %s",
              strategy.name, "/".join(available_strategies()), backend,
-             args.phase_split, args.dtype, args.accum_dtype, args.donate)
+             args.phase_split, args.sorted_batches, args.dtype,
+             args.accum_dtype, args.donate)
 
     dims = tuple(int(x) for x in args.dims.split(","))
     tensor = planted_tensor(dims, args.nnz, rank=args.rank,
@@ -131,6 +143,7 @@ def main() -> None:
         dims=dims, ranks=(args.rank,) * len(dims),
         core_rank=args.core_rank, batch_size=args.batch,
         backend=backend, phase_split=args.phase_split,
+        sorted_batches=args.sorted_batches,
         dtype=args.dtype, accum_dtype=args.accum_dtype,
     )
 

@@ -325,18 +325,25 @@ def test_bench_step_schema_roundtrip():
     from benchmarks.common import validate_bench_step
 
     doc = {
-        "schema": "bench_step/v1",
+        "schema": "bench_step/v2",
         "config": {"dims": [4, 4, 4], "nnz": 10, "rank": 2,
                    "core_rank": 2, "batch": 8},
         "results": [{"backend": "xla", "dtype": "float32",
                      "update_order": "jacobi", "mode": "joint",
-                     "us_per_step": 1.0}],
+                     "us_per_step": 1.0},
+                    {"backend": "xla", "dtype": "float32",
+                     "update_order": "jacobi", "mode": "sorted",
+                     "us_per_step": 2.0, "speedup_vs_joint": 0.5}],
     }
     validate_bench_step(doc)  # must not raise
     for breakage in (
-        {"schema": "bench_step/v0"},
+        {"schema": "bench_step/v1"},   # v2 is the only accepted schema
         {"results": []},
         {"results": [{"backend": "xla"}]},
+        # v2: non-joint rows must carry the per-pair speedup field
+        {"results": [{"backend": "xla", "dtype": "float32",
+                      "update_order": "jacobi", "mode": "sorted",
+                      "us_per_step": 2.0}]},
     ):
         with pytest.raises(ValueError):
             validate_bench_step({**doc, **breakage})
@@ -356,8 +363,12 @@ def test_committed_bench_step_json_is_valid():
     doc = json.loads(path.read_text())
     validate_bench_step(doc)
     modes = {r["mode"] for r in doc["results"]}
-    assert {"joint", "phase_split", "two_phase",
-            "two_phase_cached"} <= modes
+    assert {"joint", "phase_split", "two_phase", "two_phase_cached",
+            "sorted", "onehot_scatter"} <= modes
+    # the layout's headline claim, recorded in the trajectory itself: the
+    # sorted xla path beats the dense scatter_accum-equivalent sweep on
+    # the jacobi/f32 row
+    assert doc["derived"]["sorted_vs_onehot/xla/float32"] > 1.0
 
 
 def test_serve_bf16_tables_tolerance(tensor):

@@ -1,4 +1,4 @@
-"""Property tests: Latin-hypercube schedule + shard_nonzeros invariants.
+"""Property tests: LHC schedule, shard_nonzeros, batch-order invariance.
 
 Hypothesis-driven (skipped gracefully when hypothesis isn't installed —
 see tests/_hypothesis_compat; CI installs it from requirements-dev.txt).
@@ -7,8 +7,14 @@ the same checks running on minimal containers.
 
 Covers the two §5.3 scheduling contracts the strata strategies build on —
 every stratum (hence every block) exactly once per epoch, valid base-M
-digit decompositions — and the PR 2 ``shard_nonzeros`` tiling fix, which
-previously had only example-based coverage.
+digit decompositions — the PR 2 ``shard_nonzeros`` tiling fix, and the
+PR 5 batch-order invariance of the step: the dense factor/core gradients
+a step applies are invariant under ANY permutation of the sampled batch
+(each sample contributes independently; sums are permutation-invariant up
+to float reassociation).  The mode-sorted layout's sorted-vs-unsorted
+parity is the special case where the permutation is the stable per-mode
+sort — and THERE the stable order makes the equality bitwise in f32
+(locked separately in tests/test_sorted_batches.py).
 """
 import jax
 import numpy as np
@@ -81,6 +87,61 @@ def _check_shard_nonzeros_tiling(nnz: int, shards: int, order: int,
     np.testing.assert_array_equal(flat_v, val[sel])
 
 
+def _check_step_gradients_batch_order_invariance(perm_seed: int,
+                                                 backend: str = "xla",
+                                                 phase_split: bool = False
+                                                 ) -> None:
+    """The applied (post-scatter) gradients don't depend on the order the
+    batch arrived in: permuting (idx, val) together permutes the per-
+    sample ``row_grads``/``err``/``pred`` (equivariance) and leaves the
+    scattered dense row gradients and the core gradients invariant up to
+    float reassociation (the sums run in a different order)."""
+    from repro.core import FastTuckerConfig, init_state
+    from repro.core import fasttucker as ft
+    from repro.data.synthetic import planted_tensor
+
+    dims = (14, 11, 9)
+    t = planted_tensor(dims, 600, noise=0.05, seed=0)
+    cfg = FastTuckerConfig(dims=dims, ranks=(3,) * 3, core_rank=3,
+                           batch_size=96, backend=backend,
+                           phase_split=phase_split)
+    params = init_state(jax.random.PRNGKey(0), cfg).params
+    idx, val = t.indices[:96], t.values[:96]
+    p = jax.random.permutation(jax.random.PRNGKey(perm_seed), 96)
+
+    g0 = ft.step_gradients(params, idx, val, cfg)
+    g1 = ft.step_gradients(params, idx[p], val[p], cfg)
+    # per-sample outputs are equivariant: g1 = g0 permuted
+    np.testing.assert_array_equal(np.asarray(g0.pred)[np.asarray(p)],
+                                  np.asarray(g1.pred))
+    np.testing.assert_array_equal(np.asarray(g0.err)[np.asarray(p)],
+                                  np.asarray(g1.err))
+    for n in range(cfg.order):
+        np.testing.assert_array_equal(
+            np.asarray(g0.row_grads[n])[np.asarray(p)],
+            np.asarray(g1.row_grads[n]))
+        # summed quantities are invariant (reassociation tolerance only)
+        np.testing.assert_allclose(np.asarray(g0.core_grads[n]),
+                                   np.asarray(g1.core_grads[n]),
+                                   rtol=1e-5, atol=1e-6)
+    d0 = ft.scatter_row_grads(params.factors, idx, g0.row_grads,
+                              backend=backend)
+    d1 = ft.scatter_row_grads(params.factors, idx[p], g1.row_grads,
+                              backend=backend)
+    for n in range(cfg.order):
+        np.testing.assert_allclose(np.asarray(d0[n]), np.asarray(d1[n]),
+                                   rtol=1e-5, atol=1e-6)
+    # special case: the stable per-mode sort permutation — the sorted
+    # layout — is not merely close but BITWISE on the xla backend
+    if backend == "xla":
+        lay = ft.sorted_batch_layout(idx)
+        ds = ft.scatter_row_grads(params.factors, idx, g0.row_grads,
+                                  backend=backend, layout=lay)
+        for n in range(cfg.order):
+            np.testing.assert_array_equal(np.asarray(d0[n]),
+                                          np.asarray(ds[n]))
+
+
 # ---------------------------------------------------------------------------
 # hypothesis-driven forms
 # ---------------------------------------------------------------------------
@@ -106,6 +167,14 @@ def test_shard_nonzeros_padding_invariants(nnz, shards, order, seed):
     _check_shard_nonzeros_tiling(nnz, shards, order, seed)
 
 
+@settings(max_examples=10, deadline=None)
+@given(perm_seed=st.integers(0, 2**31 - 1),
+       phase_split=st.booleans())
+def test_step_gradients_batch_order_invariance(perm_seed, phase_split):
+    _check_step_gradients_batch_order_invariance(perm_seed,
+                                                 phase_split=phase_split)
+
+
 # ---------------------------------------------------------------------------
 # example-based fallbacks (always run, incl. hypothesis-less containers)
 # ---------------------------------------------------------------------------
@@ -114,6 +183,14 @@ def test_lhc_examples():
     for seed, M, N in ((0, 4, 3), (7, 3, 4), (123, 1, 3), (9, 5, 2),
                        (3, 2, 5)):
         _check_epoch_covers_every_block(seed, M, N)
+
+
+def test_step_gradients_batch_order_invariance_examples():
+    for seed in (0, 7):
+        _check_step_gradients_batch_order_invariance(seed)
+    _check_step_gradients_batch_order_invariance(3, phase_split=True)
+    _check_step_gradients_batch_order_invariance(5,
+                                                 backend="pallas_interpret")
 
 
 def test_shard_nonzeros_examples():

@@ -219,6 +219,57 @@ def test_strategy_parity_four_devices():
 
 
 @pytest.mark.slow
+def test_sorted_batches_parity_four_devices():
+    """Mode-sorted layout composes with every strategy's sharding at M=4:
+    local/sync sorted trajectories are BITWISE equal to unsorted; the
+    strata flavors (whose shard_map-compiled steps carry a pre-existing
+    ~1-ulp FMA-contraction wobble between compiled variants) match to an
+    ulp-tight tolerance — see tests/test_sorted_batches.py for the
+    eager-bitwise stratum-body assertion."""
+    run_with_devices("""
+        import jax, numpy as np
+        from repro.core import FastTuckerConfig, init_state
+        from repro.data.synthetic import planted_tensor
+        from repro.distributed import get_strategy
+        from repro.launch.mesh import make_host_mesh
+
+        dims = (60, 48, 36)
+        t = planted_tensor(dims, 20000, noise=0.05, seed=1)
+        mesh = make_host_mesh()
+        assert mesh.devices.size == 4
+
+        def run(name, sorted_batches, steps=16):
+            cfg = FastTuckerConfig(dims=dims, ranks=(4,)*3, core_rank=4,
+                                   batch_size=256,
+                                   sorted_batches=sorted_batches)
+            st = get_strategy(name)
+            plan = st.prepare(t, cfg, mesh if st.needs_mesh else None,
+                              seed=0)
+            ds = st.init(plan, init_state(jax.random.PRNGKey(0), cfg),
+                         jax.random.PRNGKey(7))
+            step = st.make_step(plan)
+            with mesh:
+                while int(ds.step) < steps:
+                    ds = step(ds)
+            return st.eval_params(plan, ds)
+
+        for name in ("local", "sync"):
+            a, b = run(name, False), run(name, True)
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(np.asarray(x),
+                                              np.asarray(y))
+            print(name, "bitwise ok")
+        for name in ("strata", "strata_overlap"):
+            a, b = run(name, False), run(name, True)
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=1e-6, atol=1e-7)
+            print(name, "ulp-tight ok")
+        print("sorted parity ok")
+    """, num_devices=4, timeout=1500)
+
+
+@pytest.mark.slow
 def test_overlap_step_hides_rotations_four_devices():
     """Compiled strata_overlap chunk: ≤ strata collective bytes per step,
     and each rotation is issued ahead of compute that doesn't need it."""
