@@ -29,11 +29,13 @@ every kernel backend × storage dtype × step mode:
                          apples-to-apples within one backend
 
 plus gauss_seidel joint / phase_split / sorted rows, and writes the
-machine-readable ``BENCH_step.json`` (schema ``bench_step/v2``,
+machine-readable ``BENCH_step.json`` (schema ``bench_step/v3``,
 ``common.validate_bench_step``) that records the perf trajectory at the
-repo root.  v2 also stamps every non-joint row with its
-``speedup_vs_joint`` so per-pair regressions (e.g. xla/f32 phase_split
-vs joint) are visible in the document itself.
+repo root.  v2 stamps every non-joint row with its ``speedup_vs_joint``
+so per-pair regressions (e.g. xla/f32 phase_split vs joint) are visible
+in the document itself; v3 adds the optional ``ingest`` section that
+``benchmarks.bench_ingest`` fills via ``attach_ingest`` (out-of-core
+store + prefetch pipeline sweep).
 
     PYTHONPATH=src python -m benchmarks.bench_sota_time \
         --step-sweep [--smoke] [--out BENCH_step.json]
@@ -334,6 +336,25 @@ def run_step_sweep(smoke: bool = False,
             json.dump(doc, f, indent=1)
             f.write("\n")
         print(f"# wrote {out_path}")
+    return doc
+
+
+def attach_ingest(ingest: dict, path: str = "BENCH_step.json") -> dict:
+    """Merge an ingestion sweep (``benchmarks.bench_ingest``) into an
+    existing BENCH_step document, upgrading it to schema v3 in place.
+
+    The step-sweep rows are untouched — the ingest section is additive,
+    which is what keeps v2 documents readable after the upgrade.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    doc["schema"] = BENCH_STEP_SCHEMA
+    doc["ingest"] = ingest
+    validate_bench_step(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"# attached ingest sweep to {path}")
     return doc
 
 

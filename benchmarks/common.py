@@ -5,7 +5,8 @@ import time
 
 import jax
 
-BENCH_STEP_SCHEMA = "bench_step/v2"
+BENCH_STEP_SCHEMA = "bench_step/v3"
+BENCH_STEP_SCHEMA_V2 = "bench_step/v2"
 
 # every result row must carry exactly these fields
 BENCH_STEP_ROW_FIELDS = {
@@ -24,22 +25,70 @@ BENCH_STEP_ROW_FIELDS = {
 # document itself instead of requiring a reader to divide rows.
 BENCH_STEP_SPEEDUP_FIELD = "speedup_vs_joint"
 
+# v3: an optional top-level "ingest" section records the out-of-core
+# ingestion sweep (benchmarks/bench_ingest.py): per-nnz rows measuring
+# the store+prefetch pipeline against the resident-bucket path.
+INGEST_ROW_FIELDS = {
+    "nnz": int,                        # source tensor nonzeros
+    "store": str,                      # "memory" | "spill"
+    "prefetch_depth": int,             # strata issued ahead of use
+    "us_per_step_stream": float,       # steady-state prefetched step
+    "us_per_step_sync": float,         # depth-0: load on the hot path
+    "us_per_stratum_load": float,      # pure load+device_put of a chunk
+    "transfer_hidden_fraction": float,  # (sync − stream) / load, in [0,1]
+}
+# optional per-row fields (None/absent when the resident path can't run
+# at that nnz — the memory-bounded regime the store exists for):
+#   us_per_step_resident : float   resident-bucket step time
+#   stream_vs_resident   : float   stream/resident ratio (1.0 = parity)
+#   epoch_s, epoch_steps, nnz_per_s : full-epoch streaming stats
+
+
+def _validate_ingest(ingest) -> None:
+    if not isinstance(ingest, dict):
+        raise ValueError("ingest section must be a dict")
+    rows = ingest.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("ingest.rows must be a non-empty list")
+    for i, r in enumerate(rows):
+        for field, typ in INGEST_ROW_FIELDS.items():
+            if field not in r:
+                raise ValueError(f"ingest.rows[{i}] missing {field!r}")
+            if not isinstance(r[field], typ):
+                raise ValueError(
+                    f"ingest.rows[{i}].{field} must be {typ.__name__}, "
+                    f"got {type(r[field]).__name__}")
+        if not 0.0 <= r["transfer_hidden_fraction"] <= 1.0:
+            raise ValueError(
+                f"ingest.rows[{i}].transfer_hidden_fraction must be in "
+                f"[0, 1], got {r['transfer_hidden_fraction']}")
+        for field in ("us_per_step_stream", "us_per_step_sync",
+                      "us_per_stratum_load"):
+            if r[field] <= 0:
+                raise ValueError(f"ingest.rows[{i}].{field} must be > 0")
+
 
 def validate_bench_step(doc: dict) -> None:
     """Raise ``ValueError`` unless ``doc`` is a valid BENCH_step document.
 
     The contract CI's bench-smoke step (and tests) hold the emitted JSON
     to, so the recorded perf trajectory stays machine-readable across PRs.
-    Schema ``bench_step/v2``: adds the ``sorted`` / ``onehot_scatter``
-    step modes and the required per-pair ``speedup_vs_joint`` field on
-    every non-joint row.
+    Schema ``bench_step/v3`` adds the optional top-level ``ingest``
+    section (out-of-core ingestion sweep); ``bench_step/v2`` documents —
+    the same result rows, no ingest section — stay readable.
     """
     if not isinstance(doc, dict):
         raise ValueError(f"BENCH_step document must be a dict, "
                          f"got {type(doc).__name__}")
-    if doc.get("schema") != BENCH_STEP_SCHEMA:
-        raise ValueError(f"schema must be {BENCH_STEP_SCHEMA!r}, "
-                         f"got {doc.get('schema')!r}")
+    schema = doc.get("schema")
+    if schema not in (BENCH_STEP_SCHEMA, BENCH_STEP_SCHEMA_V2):
+        raise ValueError(f"schema must be {BENCH_STEP_SCHEMA!r} "
+                         f"(or legacy {BENCH_STEP_SCHEMA_V2!r}), "
+                         f"got {schema!r}")
+    if schema == BENCH_STEP_SCHEMA_V2 and "ingest" in doc:
+        raise ValueError("ingest section requires schema bench_step/v3")
+    if "ingest" in doc:
+        _validate_ingest(doc["ingest"])
     for key in ("config", "results"):
         if key not in doc:
             raise ValueError(f"missing top-level key {key!r}")

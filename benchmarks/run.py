@@ -18,6 +18,7 @@ MODULES = {
     "tbl8_12": "benchmarks.bench_kernel_blocks",
     "fig7a": "benchmarks.bench_order_scaling",
     "fig7bc": "benchmarks.bench_multidev",
+    "ingest": "benchmarks.bench_ingest",
     "lm_step": "benchmarks.bench_lm_step",
 }
 

@@ -1,4 +1,4 @@
-"""Deterministic sharded data pipelines.
+"""Deterministic sharded data pipelines + the out-of-core nonzero store.
 
 ``TokenPipeline`` — synthetic-corpus LM batches: deterministic per (seed,
 step, shard), so elastic restarts replay identical data regardless of how
@@ -6,10 +6,31 @@ many hosts participate (each host materializes only its shard slice).
 
 ``TensorStream`` — streams sampling-set batches for the STD engine with the
 same replay property.
+
+``NonzeroStore`` — chunk-sharded COO nonzeros for the HOHDST regime the
+paper targets (data too large to sit resident on one device).  Nonzeros
+are bucketed per (stratum, worker) exactly like
+``core.sptensor.partition_for_workers`` — same entry order, same padded
+length — so a stratum chunk read from the store is bit-identical to the
+resident bucket slice, and the strata strategies' trajectories don't
+change when fed from it.  Chunks live either in host memory (small data)
+or in memory-mapped ``.npy`` spill files (large data): only the strata
+currently being prefetched are ever paged in.
+
+``StratumPrefetcher`` — walks the Latin-hypercube epoch schedule and
+issues each stratum's block to device one-or-more strata ahead of use
+(``jax.device_put`` on a background thread, bounded ``depth`` queue) —
+the same issue-ahead discipline ``strata_overlap`` applies to its shard
+rotations, now host→device: steady-state step time becomes
+max(compute, transfer) instead of compute + transfer.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import queue
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -86,3 +107,306 @@ class TensorStream:
             (self.seed, step, self.shard, 0xFA57))
         return rng.integers(0, self.nnz, size=self.batch_size,
                             dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# out-of-core nonzero store (per-stratum chunks, optional mmap spill)
+# ---------------------------------------------------------------------------
+
+_STORE_META_FILE = "meta.json"
+_STORE_FIELDS = ("indices", "values", "mask")
+_STORE_DTYPES = {"indices": np.int32, "values": np.float32, "mask": bool}
+
+
+class NonzeroStore:
+    """COO nonzeros sharded into per-stratum chunks.
+
+    Layout is EXACTLY ``core.sptensor.partition_for_workers`` applied to
+    the M-padded tensor (what ``StrataLayout.build`` feeds it): field
+    shapes ``indices (S, M, L, N)``, ``values (S, M, L)``,
+    ``mask (S, M, L)`` with S = M**(N-1) strata, entries in order of
+    appearance within each bucket, L the global padded bucket length.
+    ``stratum(s)`` hands back host views of one chunk — for a spilled
+    store that is a memmap slice, so reading stratum s pages in only
+    stratum s.
+
+    The writer (``build``) never materializes the (S, M, L, ·) arrays in
+    host memory for a spilled store: it streams the source nonzeros in
+    bounded chunks — one counting pass to size L, one scatter pass into
+    the memmaps — so peak extra host memory is O(chunk), not O(nnz).
+    """
+
+    def __init__(self, indices, values, mask, meta: dict,
+                 path: str | None = None):
+        self.indices = indices
+        self.values = values
+        self.mask = mask
+        self.meta = dict(meta)
+        self.path = path
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def num_strata(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def num_workers(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def order(self) -> int:
+        return self.indices.shape[3]
+
+    @property
+    def chunk_len(self) -> int:
+        return self.indices.shape[2]
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return tuple(self.meta["dims"])
+
+    @property
+    def padded_dims(self) -> tuple[int, ...]:
+        return tuple(self.meta["padded_dims"])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.meta["nnz"])
+
+    @property
+    def spilled(self) -> bool:
+        return self.path is not None
+
+    @property
+    def nbytes(self) -> int:
+        """Total store size (bytes) across all chunks."""
+        return sum(getattr(self, f).nbytes for f in _STORE_FIELDS)
+
+    @property
+    def stratum_nbytes(self) -> int:
+        """Host bytes of ONE stratum chunk (= per-step transfer size)."""
+        return self.nbytes // self.num_strata
+
+    # -- access --------------------------------------------------------------
+    def stratum(self, s: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host arrays (idx (M, L, N), val (M, L), msk (M, L)) of chunk s.
+
+        Spilled stores return fresh in-memory copies (forcing the memmap
+        read NOW, on the calling thread — the prefetcher calls this from
+        its background thread so the disk read is hidden too).
+        """
+        idx, val, msk = self.indices[s], self.values[s], self.mask[s]
+        if self.spilled:
+            idx, val, msk = (np.array(idx), np.array(val), np.array(msk))
+        return idx, val, msk
+
+    def strata_block(self, ids) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Device-major block of several chunks: (M, K, L, ·) for K ids.
+
+        The host-side layout ``strata_overlap`` feeds its fused K-stratum
+        step (leading mesh axis), assembled chunk by chunk.
+        """
+        ids = list(ids)
+        K, (S, M, L, N) = len(ids), self.indices.shape
+        idx = np.empty((M, K, L, N), np.int32)
+        val = np.empty((M, K, L), np.float32)
+        msk = np.empty((M, K, L), bool)
+        for k, s in enumerate(ids):
+            i, v, m = self.stratum(int(s))
+            idx[:, k], val[:, k], msk[:, k] = i, v, m
+        return idx, val, msk
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, tensor, num_workers: int, *, spill_dir: str | None = None,
+              pad_multiple: int = 8, chunk_nnz: int = 1 << 20,
+              ) -> "NonzeroStore":
+        """Shard a COO tensor into per-stratum chunks.
+
+        ``spill_dir=None`` keeps the chunks in host memory (same total
+        footprint as the resident buckets, but chunk-addressable, so the
+        prefetch path is identical); a directory spills them to
+        memory-mapped ``.npy`` files (+ ``meta.json``) reopenable with
+        ``NonzeroStore.open``.
+        """
+        from repro.core.sptensor import BlockPartition
+
+        M = int(num_workers)
+        dims = tuple(int(d) for d in tensor.dims)
+        padded_dims = tuple(-(-d // M) * M for d in dims)
+        part = BlockPartition(padded_dims, M)
+        idx = np.asarray(tensor.indices)
+        val = np.asarray(tensor.values)
+        nnz, N = idx.shape
+        S = M ** (N - 1)
+
+        # pass 1: bucket counts → global padded length L
+        counts = np.zeros(S * M, np.int64)
+        for lo in range(0, nnz, chunk_nnz):
+            sl = slice(lo, min(lo + chunk_nnz, nnz))
+            s_, w_ = part.assign(idx[sl])
+            counts += np.bincount(s_ * M + w_, minlength=S * M)
+        L = max(1, int(counts.max()))
+        L = ((L + pad_multiple - 1) // pad_multiple) * pad_multiple
+
+        meta = {
+            "dims": list(dims), "padded_dims": list(padded_dims),
+            "num_workers": M, "pad_multiple": pad_multiple,
+            "nnz": int(nnz), "chunk_len": L, "num_strata": S,
+        }
+        shapes = {"indices": (S, M, L, N), "values": (S, M, L),
+                  "mask": (S, M, L)}
+        if spill_dir is None:
+            arrays = {f: np.zeros(shapes[f], _STORE_DTYPES[f])
+                      for f in _STORE_FIELDS}
+        else:
+            os.makedirs(spill_dir, exist_ok=True)
+            arrays = {
+                f: np.lib.format.open_memmap(
+                    os.path.join(spill_dir, f"{f}.npy"), mode="w+",
+                    dtype=_STORE_DTYPES[f], shape=shapes[f])
+                for f in _STORE_FIELDS
+            }  # fresh memmaps are zero-filled: padding needs no extra pass
+
+        # pass 2: scatter entries at their running per-bucket offsets,
+        # preserving order of appearance (== partition_for_workers)
+        flat_idx = arrays["indices"].reshape(S * M, L, N)
+        flat_val = arrays["values"].reshape(S * M, L)
+        flat_msk = arrays["mask"].reshape(S * M, L)
+        offsets = np.zeros(S * M, np.int64)
+        for lo in range(0, nnz, chunk_nnz):
+            sl = slice(lo, min(lo + chunk_nnz, nnz))
+            s_, w_ = part.assign(idx[sl])
+            key = s_ * M + w_
+            order = np.argsort(key, kind="stable")
+            ksort = key[order]
+            first = np.searchsorted(ksort, np.arange(S * M))
+            pos = offsets[ksort] + (np.arange(len(ksort)) - first[ksort])
+            flat_idx[ksort, pos] = idx[sl][order]
+            flat_val[ksort, pos] = val[sl][order]
+            flat_msk[ksort, pos] = True
+            offsets += np.bincount(key, minlength=S * M)
+
+        if spill_dir is not None:
+            for a in arrays.values():
+                a.flush()
+            with open(os.path.join(spill_dir, _STORE_META_FILE), "w") as f:
+                json.dump(meta, f, indent=1)
+            return cls.open(spill_dir)
+        return cls(arrays["indices"], arrays["values"], arrays["mask"],
+                   meta)
+
+    @classmethod
+    def open(cls, path: str) -> "NonzeroStore":
+        """Reopen a spilled store read-only (memmapped chunks)."""
+        with open(os.path.join(path, _STORE_META_FILE)) as f:
+            meta = json.load(f)
+        arrays = {
+            f: np.load(os.path.join(path, f"{f}.npy"), mmap_mode="r")
+            for f in _STORE_FIELDS
+        }
+        return cls(arrays["indices"], arrays["values"], arrays["mask"],
+                   meta, path=path)
+
+    def save(self, path: str) -> "NonzeroStore":
+        """Spill an in-memory store to ``path`` and reopen it memmapped."""
+        os.makedirs(path, exist_ok=True)
+        for f in _STORE_FIELDS:
+            np.save(os.path.join(path, f"{f}.npy"), getattr(self, f))
+        with open(os.path.join(path, _STORE_META_FILE), "w") as f:
+            json.dump(self.meta, f, indent=1)
+        return NonzeroStore.open(path)
+
+
+# ---------------------------------------------------------------------------
+# host→device stratum prefetcher (double-buffered device_put)
+# ---------------------------------------------------------------------------
+
+class StratumPrefetcher:
+    """Issues schedule blocks to device ``depth`` positions ahead of use.
+
+    ``load_fn(pos)`` returns the host arrays for schedule position
+    ``pos``; ``next_pos(pos)`` gives the position consumed after ``pos``
+    (strata advance by 1 mod S, ``strata_overlap`` by its chunk length).
+    A background thread walks that sequence, calls ``place_fn`` (default
+    ``jax.device_put``) on each block, and parks the device arrays in a
+    bounded queue — so by the time the training loop asks for position
+    p, both the host read (memmap page-in) and the host→device transfer
+    of p (and up to ``depth``−1 successors) already happened off the
+    critical path.  ``depth=0`` degrades to synchronous load-on-demand
+    (the unhidden baseline the ingestion benchmark measures against).
+
+    ``take(pos)`` enforces in-order consumption; a restore/resume that
+    jumps the step counter just re-seeds the walk (``reset``).
+    """
+
+    def __init__(self, load_fn, next_pos, *, depth: int = 2,
+                 place_fn=None, start: int = 0):
+        self._load = load_fn
+        self._next = next_pos
+        self.depth = max(0, int(depth))
+        self._place = place_fn if place_fn is not None else jax.device_put
+        self._thread: threading.Thread | None = None
+        self._stop: threading.Event | None = None
+        self._queue: queue.Queue | None = None
+        self._head = start
+        if self.depth:
+            self._spawn(start)
+
+    def _spawn(self, start: int) -> None:
+        stop = threading.Event()
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        load, place, nxt = self._load, self._place, self._next
+
+        def worker(pos: int) -> None:
+            while not stop.is_set():
+                blocks = place(load(pos))
+                while not stop.is_set():
+                    try:
+                        q.put((pos, blocks), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                pos = nxt(pos)
+
+        t = threading.Thread(target=worker, args=(start,),
+                             name="stratum-prefetch", daemon=True)
+        self._stop, self._queue, self._thread, self._head = stop, q, t, start
+        t.start()
+
+    def take(self, pos: int):
+        """Device blocks for schedule position ``pos`` (in-order walk)."""
+        if self.depth == 0:
+            return self._place(self._load(pos))
+        if pos != self._head:
+            self.reset(pos)
+        got, blocks = self._queue.get()
+        assert got == pos, f"prefetch walk desync: got {got}, want {pos}"
+        self._head = self._next(pos)
+        return blocks
+
+    def reset(self, pos: int) -> None:
+        """Re-seed the walk at ``pos`` (after a resume/restore jump)."""
+        self.close()
+        if self.depth:
+            self._spawn(pos)
+        else:
+            self._head = pos
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            # unblock a worker stuck in put()
+            try:
+                while True:
+                    self._queue.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def __del__(self):  # best-effort; the thread is a daemon anyway
+        try:
+            self.close()
+        except Exception:
+            pass

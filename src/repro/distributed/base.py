@@ -86,6 +86,14 @@ class DistStrategy(abc.ABC):
     def steps_per_call(self, plan) -> int:
         return 1
 
+    def nnz_per_step(self, plan) -> int:
+        """Nonzeros consumed per update step (throughput accounting).
+
+        Default: one |Ψ| draw.  Strategies whose devices each draw their
+        own |Ψ| (sync, the strata flavors) override with M·|Ψ|.
+        """
+        return plan.cfg.batch_size
+
     # -- evaluation ----------------------------------------------------------
 
     def eval_params(self, plan, dstate: DistState) -> FastTuckerParams:

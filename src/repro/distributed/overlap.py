@@ -126,20 +126,52 @@ class StrataOverlapStrategy(StrataStrategy):
         self.chunk = chunk
 
     def prepare(self, tensor, cfg, mesh, *, compress: bool = False,
-                seed: int = 0) -> OverlapPlan:
-        base = _prepare_run_plan(tensor, cfg, mesh, compress, seed)
+                seed: int = 0, store=None,
+                prefetch_depth: int = 2) -> OverlapPlan:
+        base = _prepare_run_plan(tensor, cfg, mesh, compress, seed,
+                                 store=store, prefetch_depth=prefetch_depth)
         chunk = max(1, min(self.chunk, len(base.schedule)))
         return OverlapPlan(
             cfg=base.cfg, mesh=base.mesh, layout=base.layout,
             schedule=base.schedule, digits=base.digits,
-            compress=base.compress, axis=base.axis, chunk=chunk)
+            compress=base.compress, axis=base.axis, store=base.store,
+            prefetch_depth=base.prefetch_depth, chunk=chunk)
 
     def steps_per_call(self, plan: OverlapPlan) -> int:
         return plan.chunk
 
+    def nnz_per_step(self, plan: OverlapPlan) -> int:
+        return plan.cfg.batch_size * plan.layout.num_workers
+
     def make_step(self, plan: OverlapPlan
                   ) -> Callable[[DistState], DistState]:
         specialized = _build_chunk_specializer(plan)
+        S = len(plan.schedule)
+
+        def digit_seq_at(pos: int):
+            K = min(plan.chunk, S - pos)
+            return tuple(
+                tuple(int(d) for d in plan.digits[pos + k])
+                for k in range(K)
+            )
+
+        if plan.store is not None:
+            # out-of-core: the prefetcher walks K-stratum GROUPS (the
+            # unit this strategy consumes), assembling each (M, K, L, ·)
+            # block + issuing it to device ahead of the fused step —
+            # host→device double buffering layered on top of the
+            # rotation double buffering inside the compiled chunk
+            fetch = _make_chunk_prefetcher(plan)
+
+            def step(dstate: DistState) -> DistState:
+                pos = int(dstate.step) % S
+                idx_c, val_c, msk_c = fetch.take(pos)
+                return specialized(digit_seq_at(pos))(
+                    dstate, idx_c, val_c, msk_c)
+
+            step.prefetcher = fetch
+            return step
+
         chunk_for = _chunk_data_cache(plan)
 
         def step(dstate: DistState) -> DistState:
@@ -151,8 +183,36 @@ class StrataOverlapStrategy(StrataStrategy):
 
     def lower_step(self, plan: OverlapPlan, dstate: DistState):
         specialized = _build_chunk_specializer(plan)
-        digit_seq, idx_c, val_c, msk_c = _chunk_data_cache(plan)(0)
+        if plan.store is not None:
+            K = min(plan.chunk, len(plan.schedule))
+            digit_seq = tuple(
+                tuple(int(d) for d in plan.digits[k]) for k in range(K))
+            idx_c, val_c, msk_c = plan.store.strata_block(
+                plan.schedule[:K])
+        else:
+            digit_seq, idx_c, val_c, msk_c = _chunk_data_cache(plan)(0)
         return specialized(digit_seq).lower(dstate, idx_c, val_c, msk_c)
+
+
+def _make_chunk_prefetcher(plan: OverlapPlan):
+    """Prefetcher over K-stratum schedule groups (device-major blocks)."""
+    from repro.data.pipeline import StratumPrefetcher
+    from repro.distributed.strata import _block_sharding
+
+    store, S = plan.store, len(plan.schedule)
+    sharding = _block_sharding(plan)
+
+    def load(pos: int):
+        K = min(plan.chunk, S - pos)
+        return store.strata_block(plan.schedule[pos: pos + K])
+
+    def next_pos(pos: int) -> int:
+        return (pos + min(plan.chunk, S - pos)) % S
+
+    return StratumPrefetcher(
+        load, next_pos, depth=plan.prefetch_depth,
+        place_fn=lambda blocks: jax.device_put(blocks, sharding),
+    )
 
 
 def _chunk_data_cache(plan: OverlapPlan):

@@ -43,10 +43,17 @@ from .base import DistState, DistStrategy, compressed_reduce, step_donation
 
 @dataclasses.dataclass
 class StrataLayout:
-    """Host-side prep for the stratified schedule."""
-    buckets: dict          # from partition_for_workers
+    """Host-side prep for the stratified schedule.
+
+    Backed either by resident device buckets (``buckets``, from
+    ``partition_for_workers``) or by an out-of-core ``NonzeroStore``
+    (``store``) whose chunks have the identical (S, M, L, ·) layout —
+    the per-stratum math never sees the difference.
+    """
+    buckets: dict | None   # from partition_for_workers (resident path)
     rows_per_block: tuple  # per mode (padded row count / M)
     num_workers: int
+    store: "NonzeroStore | None" = None
 
     @classmethod
     def build(cls, tensor: SparseTensor, num_workers: int):
@@ -56,17 +63,32 @@ class StrataLayout:
         buckets = partition_for_workers(padded, M)
         return cls(buckets, tuple(d // M for d in padded_dims), M)
 
+    @classmethod
+    def from_store(cls, store: "NonzeroStore"):
+        """Out-of-core layout: chunks stay host-side in the store."""
+        M = store.num_workers
+        return cls(None, tuple(d // M for d in store.padded_dims), M,
+                   store=store)
+
     @property
     def num_strata(self) -> int:
+        if self.store is not None:
+            return self.store.num_strata
         return self.buckets["indices"].shape[0]
+
+    @property
+    def order(self) -> int:
+        if self.store is not None:
+            return self.store.order
+        return self.buckets["indices"].shape[-1]
 
     def stratum_digits(self, s: int) -> np.ndarray:
         """Base-M digits (mode 1..N-1 shifts) of stratum s."""
         from repro.core.sampling import stratum_digits
 
-        N = self.buckets["indices"].shape[-1]
         return np.asarray(
-            stratum_digits(jnp.asarray([s]), self.num_workers, N))[0]
+            stratum_digits(jnp.asarray([s]), self.num_workers,
+                           self.order))[0]
 
 
 def pad_factors_for_strata(params: FastTuckerParams, plan: StrataLayout
@@ -244,17 +266,56 @@ class StrataRunPlan:
     digits: np.ndarray     # (S, N) matching digits
     compress: bool
     axis: str = "data"
+    store: "NonzeroStore | None" = None   # out-of-core chunk source
+    prefetch_depth: int = 2               # device blocks issued ahead
 
 
-def _prepare_run_plan(tensor, cfg, mesh, compress, seed, axis="data"):
+def _prepare_run_plan(tensor, cfg, mesh, compress, seed, axis="data",
+                      store=None, prefetch_depth=2):
     from repro.core.sampling import latin_hypercube_schedule, stratum_digits
 
-    layout = StrataLayout.build(tensor, mesh.devices.size)
+    if store is not None:
+        if store.num_workers != mesh.devices.size:
+            raise ValueError(
+                f"store was sharded for {store.num_workers} workers but "
+                f"the mesh has {mesh.devices.size} devices — rebuild it "
+                f"with NonzeroStore.build(tensor, {mesh.devices.size})")
+        layout = StrataLayout.from_store(store)
+    else:
+        layout = StrataLayout.build(tensor, mesh.devices.size)
     M = layout.num_workers
     schedule = np.asarray(latin_hypercube_schedule(
         jax.random.PRNGKey(seed), M, cfg.order))
     digits = np.asarray(stratum_digits(schedule, M, cfg.order))
-    return StrataRunPlan(cfg, mesh, layout, schedule, digits, compress, axis)
+    return StrataRunPlan(cfg, mesh, layout, schedule, digits, compress,
+                         axis, store, prefetch_depth)
+
+
+def _block_sharding(plan: StrataRunPlan):
+    """Devices-major placement for (M, …) schedule blocks: each device
+    receives its own bucket slice during the prefetch, not at step time."""
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(plan.mesh, P(plan.axis))
+
+
+def make_stratum_prefetcher(plan: StrataRunPlan):
+    """Prefetcher over the LHC schedule, one stratum per step.
+
+    ``take(pos)`` yields the (idx, val, msk) device blocks for schedule
+    position ``pos`` — loaded from the store and ``device_put`` on the
+    prefetch thread ``plan.prefetch_depth`` strata ahead of consumption.
+    """
+    from repro.data.pipeline import StratumPrefetcher
+
+    store, S = plan.store, len(plan.schedule)
+    sharding = _block_sharding(plan)
+    return StratumPrefetcher(
+        lambda pos: store.stratum(int(plan.schedule[pos % S])),
+        lambda pos: (pos + 1) % S,
+        depth=plan.prefetch_depth,
+        place_fn=lambda blocks: jax.device_put(blocks, sharding),
+    )
 
 
 def _init_strata_state(plan, state: TrainState, key) -> DistState:
@@ -315,17 +376,41 @@ class StrataStrategy(DistStrategy):
     name = "strata"
 
     def prepare(self, tensor: SparseTensor, cfg: FastTuckerConfig, mesh,
-                *, compress: bool = False, seed: int = 0) -> StrataRunPlan:
-        return _prepare_run_plan(tensor, cfg, mesh, compress, seed)
+                *, compress: bool = False, seed: int = 0,
+                store=None, prefetch_depth: int = 2) -> StrataRunPlan:
+        return _prepare_run_plan(tensor, cfg, mesh, compress, seed,
+                                 store=store, prefetch_depth=prefetch_depth)
 
     def init(self, plan: StrataRunPlan, state: TrainState,
              key: jax.Array) -> DistState:
         return _init_strata_state(plan, state, key)
 
+    def nnz_per_step(self, plan: StrataRunPlan) -> int:
+        # every device draws |Ψ| nonzeros from its stratum bucket
+        return plan.cfg.batch_size * plan.layout.num_workers
+
     def make_step(self, plan: StrataRunPlan
                   ) -> Callable[[DistState], DistState]:
         specialized = _build_strata_specializer(plan)
         S = len(plan.schedule)
+
+        if plan.store is not None:
+            # out-of-core: consume device blocks from the prefetcher —
+            # stratum pos+depth is in flight while pos computes. The
+            # blocks are bit-identical to the resident bucket slices
+            # (the store writer mirrors partition_for_workers), so the
+            # trajectory is too.
+            fetch = make_stratum_prefetcher(plan)
+
+            def step(dstate: DistState) -> DistState:
+                pos = int(dstate.step) % S
+                digits = tuple(int(d) for d in plan.digits[pos])
+                idx_s, val_s, msk_s = fetch.take(pos)
+                return specialized(digits)(dstate, idx_s, val_s, msk_s)
+
+            step.prefetcher = fetch  # tests/benchmarks can close() it
+            return step
+
         b = plan.layout.buckets
 
         @functools.lru_cache(maxsize=None)
@@ -354,6 +439,10 @@ class StrataStrategy(DistStrategy):
         specialized = _build_strata_specializer(plan)
         s = int(plan.schedule[0])
         digits = tuple(int(d) for d in plan.digits[0])
-        b = plan.layout.buckets
-        return specialized(digits).lower(
-            dstate, b["indices"][s], b["values"][s], b["mask"][s])
+        if plan.store is not None:
+            idx_s, val_s, msk_s = plan.store.stratum(s)
+        else:
+            b = plan.layout.buckets
+            idx_s, val_s, msk_s = (b["indices"][s], b["values"][s],
+                                   b["mask"][s])
+        return specialized(digits).lower(dstate, idx_s, val_s, msk_s)

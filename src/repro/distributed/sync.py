@@ -172,6 +172,10 @@ class SyncStrategy(DistStrategy):
         return DistState(state.params, jnp.asarray(state.step, jnp.int32),
                          key, ef)
 
+    def nnz_per_step(self, plan: SyncPlan) -> int:
+        # every device samples its own |Ψ| from its Ω shard
+        return plan.cfg.batch_size * plan.num_devices
+
     def make_step(self, plan: SyncPlan
                   ) -> Callable[[DistState], DistState]:
         jitted = _build_jitted(plan)

@@ -27,7 +27,18 @@ O(B) ``segment_reduce`` kernel); ``--dtype bfloat16``
 stores factors/core factors in bf16 with f32 MXU accumulation
 (``--accum-dtype``); ``--donate on`` (default ``auto``: off-CPU only)
 donates the step's DistState buffers into the compiled update so XLA
-aliases instead of reallocating them. Example:
+aliases instead of reallocating them.
+
+``--out-of-core`` (strata flavors) feeds the schedule from a
+chunk-sharded ``data.pipeline.NonzeroStore`` (``--spill-dir`` memory-maps
+the chunks to disk) through the ``StratumPrefetcher`` — each stratum's
+block is ``device_put`` on a background thread ``--prefetch-depth``
+strata ahead of use, so steady-state step time is max(compute, transfer)
+and the full Ω never has to be device-resident.  The trajectory is
+bitwise-identical to the resident path under the same seed/schedule.
+End-of-interval throughput (steps/s, nnz/s) and peak live device bytes
+are logged so ingestion-bound runs are diagnosable from the console.
+Example:
 
     PYTHONPATH=src python -m repro.launch.std_train --strategy strata_overlap \
         --dims 2000,1500,1000 --nnz 500000 --steps 300 --rank 8 \
@@ -51,6 +62,24 @@ from repro.distributed import available_strategies, get_strategy
 from repro.launch.mesh import make_host_mesh
 
 log = logging.getLogger("repro.std")
+
+
+def peak_device_bytes() -> tuple[int, str]:
+    """(bytes, how-measured) for the busiest local device.
+
+    Real allocators report ``peak_bytes_in_use``; CPU XLA has no
+    memory_stats, so fall back to the current live-buffer total — an
+    instantaneous lower bound, labeled as such.
+    """
+    peak = 0
+    for d in jax.local_devices():
+        stats = getattr(d, "memory_stats", None)
+        stats = stats() if callable(stats) else None
+        if stats:
+            peak = max(peak, int(stats.get("peak_bytes_in_use", 0)))
+    if peak:
+        return peak, "allocator peak"
+    return sum(x.nbytes for x in jax.live_arrays()), "live arrays"
 
 
 def main() -> None:
@@ -101,6 +130,18 @@ def main() -> None:
     ap.add_argument("--use-kernel", action="store_true",
                     help="DEPRECATED: alias for --backend "
                          "pallas/pallas_interpret")
+    ap.add_argument("--out-of-core", action="store_true",
+                    help="feed the strata strategies from a chunk-sharded "
+                         "NonzeroStore through the host→device stratum "
+                         "prefetcher instead of resident device buckets "
+                         "(trajectory-identical under the same seed)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="strata issued to device ahead of use "
+                         "(0 = synchronous load per step)")
+    ap.add_argument("--spill-dir", default="",
+                    help="spill the nonzero store to memory-mapped .npy "
+                         "chunks in this directory (default: in-memory "
+                         "chunks — same prefetch path, no disk)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest checkpoint in --ckpt-dir "
@@ -148,8 +189,29 @@ def main() -> None:
     )
 
     mesh = make_host_mesh() if strategy.needs_mesh else None
-    plan = strategy.prepare(train_t, cfg, mesh, compress=args.compress,
-                            seed=args.seed)
+    if args.out_of_core:
+        if strategy.name not in ("strata", "strata_overlap"):
+            raise SystemExit(
+                "--out-of-core streams per-stratum chunks and therefore "
+                "requires a strata strategy (got "
+                f"{strategy.name!r}); run with --strategy strata or "
+                "strata_overlap")
+        from repro.data.pipeline import NonzeroStore
+        store = NonzeroStore.build(train_t, mesh.devices.size,
+                                   spill_dir=args.spill_dir or None)
+        log.info(
+            "out-of-core store: %d strata x %d workers x chunk %d "
+            "(%.1f MiB total, %.2f MiB/stratum, %s), prefetch depth %d",
+            store.num_strata, store.num_workers, store.chunk_len,
+            store.nbytes / 2**20, store.stratum_nbytes / 2**20,
+            f"spilled to {store.path}" if store.spilled else "in-memory",
+            args.prefetch_depth)
+        plan = strategy.prepare(train_t, cfg, mesh, compress=args.compress,
+                                seed=args.seed, store=store,
+                                prefetch_depth=args.prefetch_depth)
+    else:
+        plan = strategy.prepare(train_t, cfg, mesh, compress=args.compress,
+                                seed=args.seed)
 
     key = jax.random.PRNGKey(args.seed)
     key, init_key, loop_key = jax.random.split(key, 3)
@@ -166,8 +228,10 @@ def main() -> None:
                 int(dstate.step), args.steps, args.ckpt_dir)
 
     step_fn = strategy.make_step(plan)
+    nnz_step = strategy.nnz_per_step(plan)
     t0 = time.time()
-    last_eval = int(dstate.step)
+    start_step = last_eval = last_logged = int(dstate.step)
+    t_int = t0
     with (mesh if mesh is not None else contextlib.nullcontext()):
         while int(dstate.step) < args.steps:
             dstate = step_fn(dstate)
@@ -175,12 +239,30 @@ def main() -> None:
             if i // args.eval_every > last_eval // args.eval_every \
                     or i >= args.steps:
                 last_eval = i
+                # throughput over the train-only interval (evals excluded)
+                now = time.time()
+                if i > last_logged and now > t_int:
+                    sps = (i - last_logged) / (now - t_int)
+                    mem, how = peak_device_bytes()
+                    log.info(
+                        "throughput: %.2f steps/s, %.3g nnz/s, "
+                        "device bytes %.1f MiB (%s)",
+                        sps, sps * nnz_step, mem / 2**20, how)
+                last_logged = i
                 params = strategy.eval_params(plan, dstate)
                 r, m = rmse_mae(params, test_t, ft.predict)
                 log.info("step %d rmse %.4f mae %.4f", i, r, m)
                 if ckpt:
                     strategy.save(plan, ckpt, dstate)
-    log.info("%s done in %.1fs", strategy.name, time.time() - t0)
+                t_int = time.time()
+    fetch = getattr(step_fn, "prefetcher", None)
+    if fetch is not None:
+        fetch.close()
+    elapsed = time.time() - t0
+    steps_done = int(dstate.step) - start_step
+    log.info("%s done in %.1fs (%.2f steps/s, %.3g nnz/s end to end)",
+             strategy.name, elapsed, steps_done / max(elapsed, 1e-9),
+             steps_done * nnz_step / max(elapsed, 1e-9))
 
 
 if __name__ == "__main__":

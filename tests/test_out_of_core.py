@@ -1,0 +1,352 @@
+"""Out-of-core nonzero store + stratum prefetch pipeline.
+
+Locks the three contracts the out-of-core path rides on:
+
+  * the ``NonzeroStore`` writer mirrors ``partition_for_workers`` chunk
+    for chunk (same entry order, same padded length) — in memory and
+    through the memory-mapped spill round trip;
+  * the ``StratumPrefetcher`` hands back exactly the blocks the direct
+    load would, in schedule order, at any depth, and re-seeds cleanly
+    after a resume-style jump;
+  * the strata strategies produce BITWISE-identical trajectories whether
+    fed from resident device buckets or from the store via the
+    prefetcher, under the same fixed Latin-hypercube schedule (single
+    device in tier-1; forced 4-device mesh in the slow subprocess tier).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from helpers import run_with_devices
+from repro.core import FastTuckerConfig, init_state
+from repro.core.sptensor import SparseTensor, partition_for_workers
+from repro.data.pipeline import NonzeroStore, StratumPrefetcher
+from repro.data.synthetic import planted_tensor
+from repro.distributed import get_strategy
+from repro.launch.mesh import make_host_mesh
+
+
+# ---------------------------------------------------------------------------
+# store layout == partition_for_workers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_workers", [1, 3, 4])
+def test_store_matches_partition_for_workers(num_workers):
+    t = planted_tensor((18, 15, 12), 2500, seed=0)
+    M = num_workers
+    padded_dims = tuple(-(-d // M) * M for d in t.dims)
+    buckets = partition_for_workers(
+        SparseTensor(t.indices, t.values, padded_dims), M)
+    # tiny chunk_nnz forces many scatter passes — order must still match
+    store = NonzeroStore.build(t, M, chunk_nnz=137)
+    np.testing.assert_array_equal(np.asarray(buckets["indices"]),
+                                  store.indices)
+    np.testing.assert_array_equal(np.asarray(buckets["values"]),
+                                  store.values)
+    np.testing.assert_array_equal(np.asarray(buckets["mask"]), store.mask)
+    assert store.num_strata == M ** (t.order - 1)
+    assert store.num_workers == M
+    assert store.nnz == t.nnz
+
+
+def test_store_spill_round_trip(tmp_path):
+    t = planted_tensor((14, 11, 9), 900, seed=3)
+    mem = NonzeroStore.build(t, 4)
+    spilled = NonzeroStore.build(t, 4, spill_dir=str(tmp_path / "s"))
+    assert spilled.spilled and not mem.spilled
+    np.testing.assert_array_equal(mem.indices, spilled.indices)
+    np.testing.assert_array_equal(mem.values, spilled.values)
+    np.testing.assert_array_equal(mem.mask, spilled.mask)
+
+    reopened = NonzeroStore.open(str(tmp_path / "s"))
+    assert reopened.meta == spilled.meta
+    np.testing.assert_array_equal(mem.values, reopened.values)
+    # stratum() of a spilled store materializes a real in-memory copy
+    idx, val, msk = reopened.stratum(2)
+    assert type(idx) is np.ndarray and not isinstance(idx, np.memmap)
+    np.testing.assert_array_equal(idx, mem.indices[2])
+
+    saved = mem.save(str(tmp_path / "saved"))
+    assert saved.spilled
+    np.testing.assert_array_equal(saved.indices, mem.indices)
+
+
+def test_strata_block_is_device_major(tmp_path):
+    t = planted_tensor((14, 11, 9), 900, seed=3)
+    store = NonzeroStore.build(t, 4, spill_dir=str(tmp_path / "s"))
+    ids = [5, 0, 11]
+    idx, val, msk = store.strata_block(ids)
+    M, L, N = store.num_workers, store.chunk_len, store.order
+    assert idx.shape == (M, 3, L, N)
+    assert val.shape == msk.shape == (M, 3, L)
+    for k, s in enumerate(ids):
+        np.testing.assert_array_equal(idx[:, k], store.indices[s])
+        np.testing.assert_array_equal(val[:, k], store.values[s])
+
+
+# ---------------------------------------------------------------------------
+# prefetcher semantics
+# ---------------------------------------------------------------------------
+
+def _mod_walk(S):
+    return lambda pos: (pos + 1) % S
+
+
+@pytest.mark.parametrize("depth", [0, 1, 3])
+def test_prefetcher_matches_direct_load(depth):
+    t = planted_tensor((14, 11, 9), 900, seed=1)
+    store = NonzeroStore.build(t, 4)
+    S = store.num_strata
+    pf = StratumPrefetcher(lambda p: store.stratum(p), _mod_walk(S),
+                           depth=depth)
+    try:
+        for p in list(range(S)) + [0, 1]:  # wraps the epoch boundary
+            idx, val, msk = pf.take(p % S)
+            np.testing.assert_array_equal(np.asarray(idx),
+                                          store.indices[p % S])
+            np.testing.assert_array_equal(np.asarray(val),
+                                          store.values[p % S])
+    finally:
+        pf.close()
+
+
+def test_prefetcher_reset_on_jump():
+    t = planted_tensor((14, 11, 9), 900, seed=1)
+    store = NonzeroStore.build(t, 4)
+    S = store.num_strata
+    pf = StratumPrefetcher(lambda p: store.stratum(p), _mod_walk(S),
+                           depth=2)
+    try:
+        pf.take(0)
+        pf.take(1)
+        # resume-style jump: the walk re-seeds instead of desyncing
+        idx, _, _ = pf.take(7)
+        np.testing.assert_array_equal(np.asarray(idx), store.indices[7])
+        idx, _, _ = pf.take(8)
+        np.testing.assert_array_equal(np.asarray(idx), store.indices[8])
+    finally:
+        pf.close()
+
+
+def test_prefetcher_close_is_idempotent():
+    t = planted_tensor((14, 11, 9), 300, seed=1)
+    store = NonzeroStore.build(t, 2)
+    pf = StratumPrefetcher(lambda p: store.stratum(p),
+                           _mod_walk(store.num_strata), depth=1)
+    pf.take(0)
+    pf.close()
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# trajectory parity: store+prefetch == resident buckets, bitwise
+# ---------------------------------------------------------------------------
+
+def _parity_problem():
+    dims = (18, 15, 12)
+    t = planted_tensor(dims, 2500, noise=0.05, seed=0)
+    cfg = FastTuckerConfig(dims=dims, ranks=(3,) * 3, core_rank=3,
+                           batch_size=128)
+    return t, cfg
+
+
+@pytest.mark.parametrize("name", ["strata", "strata_overlap"])
+@pytest.mark.parametrize("spill", [False, True])
+def test_out_of_core_trajectory_bitwise(tmp_path, name, spill):
+    t, cfg = _parity_problem()
+    st = get_strategy(name)
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+
+    plan_r = st.prepare(t, cfg, mesh, seed=0)
+    store = NonzeroStore.build(
+        t, mesh.devices.size,
+        spill_dir=str(tmp_path / "chunks") if spill else None)
+    plan_s = st.prepare(t, cfg, mesh, seed=0, store=store,
+                        prefetch_depth=2)
+    np.testing.assert_array_equal(plan_r.schedule, plan_s.schedule)
+
+    ds_r = st.init(plan_r, init_state(k1, cfg), k2)
+    ds_s = st.init(plan_s, init_state(k1, cfg), k2)
+    step_r, step_s = st.make_step(plan_r), st.make_step(plan_s)
+    try:
+        # past one epoch so the schedule (and prefetch walk) wraps
+        target = 2 * len(plan_r.schedule) + 1
+        while int(ds_r.step) < target:
+            ds_r, ds_s = step_r(ds_r), step_s(ds_s)
+        assert int(ds_s.step) == int(ds_r.step)
+        for a, b in zip(jax.tree_util.tree_leaves(ds_r.params),
+                        jax.tree_util.tree_leaves(ds_s.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        step_s.prefetcher.close()
+
+
+def test_prepare_rejects_mismatched_store():
+    t, cfg = _parity_problem()
+    mesh = make_host_mesh()
+    store = NonzeroStore.build(t, mesh.devices.size + 1)
+    with pytest.raises(ValueError, match="rebuild"):
+        get_strategy("strata").prepare(t, cfg, mesh, seed=0, store=store)
+
+
+@pytest.mark.slow
+def test_out_of_core_bitwise_four_devices():
+    """Resident vs spilled-store trajectories on a real 4-device mesh."""
+    run_with_devices("""
+        import tempfile
+        import numpy as np, jax
+        assert jax.device_count() == 4
+        from repro.core import FastTuckerConfig, init_state
+        from repro.data.pipeline import NonzeroStore
+        from repro.data.synthetic import planted_tensor
+        from repro.distributed import get_strategy
+        from repro.launch.mesh import make_host_mesh
+
+        dims = (18, 15, 12)
+        t = planted_tensor(dims, 2500, seed=0)
+        cfg = FastTuckerConfig(dims=dims, ranks=(3,) * 3, core_rank=3,
+                               batch_size=128)
+        mesh = make_host_mesh()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            for name in ("strata", "strata_overlap"):
+                st = get_strategy(name)
+                plan_r = st.prepare(t, cfg, mesh, seed=0)
+                store = NonzeroStore.build(t, 4, spill_dir=d + "/" + name)
+                plan_s = st.prepare(t, cfg, mesh, seed=0, store=store,
+                                    prefetch_depth=3)
+                ds_r = st.init(plan_r, init_state(k1, cfg), k2)
+                ds_s = st.init(plan_s, init_state(k1, cfg), k2)
+                step_r, step_s = st.make_step(plan_r), st.make_step(plan_s)
+                while int(ds_r.step) < 20:  # past the S=16 epoch boundary
+                    ds_r, ds_s = step_r(ds_r), step_s(ds_s)
+                for a, b in zip(
+                        jax.tree_util.tree_leaves(ds_r.params),
+                        jax.tree_util.tree_leaves(ds_s.params)):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+                step_s.prefetcher.close()
+                print(name, "OK")
+    """)
+
+
+@pytest.mark.slow
+def test_std_train_out_of_core_cli(tmp_path):
+    """The launcher flags drive the store+prefetch path end to end."""
+    run_with_devices(f"""
+        import sys
+        sys.argv = ["std_train", "--strategy", "strata", "--out-of-core",
+                    "--prefetch-depth", "2",
+                    "--spill-dir", {str(tmp_path / 'spill')!r},
+                    "--dims", "24,18,12", "--nnz", "600", "--steps", "4",
+                    "--batch", "64", "--rank", "3", "--core-rank", "3",
+                    "--eval-every", "2"]
+        from repro.launch.std_train import main
+        main()
+    """)
+
+
+def test_out_of_core_rejects_non_strata():
+    import subprocess
+    import sys
+
+    from helpers import REPO
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.std_train",
+         "--strategy", "local", "--out-of-core", "--steps", "1"],
+        capture_output=True, text=True, timeout=300,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode != 0
+    assert "--out-of-core" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# BENCH_step v3 schema: ingest section, v2 docs stay readable
+# ---------------------------------------------------------------------------
+
+def _v2_doc():
+    return {
+        "schema": "bench_step/v2",
+        "config": {"dims": [8, 8, 8], "nnz": 10, "rank": 2,
+                   "core_rank": 2, "batch": 4},
+        "results": [
+            {"backend": "xla", "dtype": "float32",
+             "update_order": "jacobi", "mode": "joint",
+             "us_per_step": 10.0},
+            {"backend": "xla", "dtype": "float32",
+             "update_order": "jacobi", "mode": "sorted",
+             "us_per_step": 5.0, "speedup_vs_joint": 2.0},
+        ],
+    }
+
+
+def _ingest_row(**kw):
+    row = {
+        "nnz": 4000, "store": "spill", "prefetch_depth": 2,
+        "us_per_step_stream": 100.0, "us_per_step_sync": 150.0,
+        "us_per_stratum_load": 80.0, "transfer_hidden_fraction": 0.62,
+    }
+    row.update(kw)
+    return row
+
+
+def test_bench_step_v2_doc_still_validates():
+    from benchmarks.common import validate_bench_step
+
+    validate_bench_step(_v2_doc())
+
+
+def test_bench_step_v3_with_ingest_validates():
+    from benchmarks.common import validate_bench_step
+
+    doc = {**_v2_doc(), "schema": "bench_step/v3",
+           "ingest": {"rows": [_ingest_row()]}}
+    validate_bench_step(doc)
+
+
+def test_bench_step_v3_rejects_bad_ingest():
+    from benchmarks.common import validate_bench_step
+
+    base = {**_v2_doc(), "schema": "bench_step/v3"}
+    with pytest.raises(ValueError, match="non-empty"):
+        validate_bench_step({**base, "ingest": {"rows": []}})
+    with pytest.raises(ValueError, match="transfer_hidden_fraction"):
+        validate_bench_step(
+            {**base,
+             "ingest": {"rows": [_ingest_row(
+                 transfer_hidden_fraction=1.5)]}})
+    with pytest.raises(ValueError, match="missing"):
+        bad = _ingest_row()
+        del bad["us_per_step_sync"]
+        validate_bench_step({**base, "ingest": {"rows": [bad]}})
+
+
+def test_bench_step_v2_rejects_ingest_section():
+    from benchmarks.common import validate_bench_step
+
+    with pytest.raises(ValueError, match="v3"):
+        validate_bench_step(
+            {**_v2_doc(), "ingest": {"rows": [_ingest_row()]}})
+
+
+def test_attach_ingest_upgrades_doc(tmp_path):
+    import json
+
+    from benchmarks.bench_sota_time import attach_ingest
+    from benchmarks.common import validate_bench_step
+
+    path = tmp_path / "BENCH_step.json"
+    path.write_text(json.dumps(_v2_doc()))
+    doc = attach_ingest({"rows": [_ingest_row()]}, str(path))
+    assert doc["schema"] == "bench_step/v3"
+    reread = json.loads(path.read_text())
+    validate_bench_step(reread)
+    assert reread["ingest"]["rows"][0]["nnz"] == 4000
+    # step-sweep rows untouched by the upgrade
+    assert reread["results"] == _v2_doc()["results"]

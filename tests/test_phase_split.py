@@ -337,7 +337,7 @@ def test_bench_step_schema_roundtrip():
     }
     validate_bench_step(doc)  # must not raise
     for breakage in (
-        {"schema": "bench_step/v1"},   # v2 is the only accepted schema
+        {"schema": "bench_step/v1"},   # pre-v2 schemas are rejected
         {"results": []},
         {"results": [{"backend": "xla"}]},
         # v2: non-joint rows must carry the per-pair speedup field
