@@ -1,4 +1,4 @@
-"""Benchmark timing helpers + the BENCH_step.json schema contract."""
+"""Benchmark timing helpers + the BENCH_step/BENCH_serve schema contracts."""
 from __future__ import annotations
 
 import time
@@ -115,6 +115,120 @@ def validate_bench_step(doc: dict) -> None:
                 raise ValueError(
                     f"results[{i}] (mode {row_['mode']!r}) must carry "
                     f"{BENCH_STEP_SPEEDUP_FIELD!r} as a positive float")
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json (benchmarks/bench_serve.py): the serving-path contract
+# ---------------------------------------------------------------------------
+
+BENCH_SERVE_SCHEMA = "bench_serve/v1"
+
+# closed_loop.rows: one row per (shard_mode, query, offered rate) point
+# measured by the closed-loop harness (repro.serve.frontend.run_closed_loop)
+SERVE_CLOSED_LOOP_ROW_FIELDS = {
+    "shard_mode": str,       # none | row | batch | gspmd (baseline top_k)
+    "query": str,            # predict | top_k
+    "offered_qps": float,    # target offered rate
+    "achieved_qps": float,   # served queries / wall
+    "p50_ms": float,         # end-to-end request latency percentiles
+    "p99_ms": float,
+    "served_requests": int,
+    "shed": int,             # queue-full + deadline rejections
+}
+
+# collectives: the HLO-asserted sharded-top_k win at M > 1 devices —
+# per-bucket collective operand bytes of the shard-local merge program vs
+# the GSPMD-compiled unsharded program on the same row-sharded tables.
+SERVE_COLLECTIVE_FIELDS = {
+    "devices": int,
+    "bucket": int,                   # request bucket the programs serve
+    "k": int,
+    "sharded_operand_bytes": int,    # shard-local merge path
+    "gspmd_operand_bytes": int,      # GSPMD baseline (O(rows) payload)
+    "reduction": float,              # gspmd / sharded — must be > 1
+}
+
+
+def validate_bench_serve(doc: dict) -> None:
+    """Raise ``ValueError`` unless ``doc`` is a valid BENCH_serve document.
+
+    Schema ``bench_serve/v1``: ``config`` (+ device count), ``throughput``
+    (bucketed vs per-query + bounded compiles), ``closed_loop.rows``
+    (typed latency/QPS points) and — whenever ``config.devices > 1`` —
+    ``collectives`` proving the shard-local top-k merge moves fewer
+    collective bytes than the GSPMD baseline (``reduction > 1`` is part
+    of the contract, so CI enforces the win, not just the format).
+    ``crossover`` (row- vs batch-sharded capacity) is required at
+    multi-device too.
+    """
+    if not isinstance(doc, dict):
+        raise ValueError(f"BENCH_serve document must be a dict, "
+                         f"got {type(doc).__name__}")
+    if doc.get("schema") != BENCH_SERVE_SCHEMA:
+        raise ValueError(f"schema must be {BENCH_SERVE_SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    for key in ("config", "throughput", "closed_loop"):
+        if key not in doc:
+            raise ValueError(f"missing top-level key {key!r}")
+    cfg = doc["config"]
+    for key in ("dims", "rank", "core_rank", "backend", "devices",
+                "microbatch"):
+        if key not in cfg:
+            raise ValueError(f"config missing {key!r}")
+    thr = doc["throughput"]
+    for key in ("per_query_qps", "bucketed_qps", "speedup",
+                "sweep_compiles", "ladder_bound"):
+        if key not in thr:
+            raise ValueError(f"throughput missing {key!r}")
+    if thr["speedup"] <= 0 or thr["bucketed_qps"] <= 0:
+        raise ValueError("throughput speedup/bucketed_qps must be > 0")
+    if thr["sweep_compiles"] > thr["ladder_bound"]:
+        raise ValueError(
+            f"unbounded compiles: {thr['sweep_compiles']} exceeds the "
+            f"ladder bound {thr['ladder_bound']}")
+    rows = doc["closed_loop"].get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("closed_loop.rows must be a non-empty list")
+    for i, r in enumerate(rows):
+        for field, typ in SERVE_CLOSED_LOOP_ROW_FIELDS.items():
+            if field not in r:
+                raise ValueError(f"closed_loop.rows[{i}] missing {field!r}")
+            if not isinstance(r[field], typ):
+                raise ValueError(
+                    f"closed_loop.rows[{i}].{field} must be "
+                    f"{typ.__name__}, got {type(r[field]).__name__}")
+        if r["p50_ms"] > r["p99_ms"]:
+            raise ValueError(
+                f"closed_loop.rows[{i}]: p50 {r['p50_ms']} > p99 "
+                f"{r['p99_ms']} — percentiles must be monotone")
+    multi = int(cfg["devices"]) > 1
+    if multi and "collectives" not in doc:
+        raise ValueError("collectives section is required at devices > 1")
+    if "collectives" in doc:
+        col = doc["collectives"]
+        for field, typ in SERVE_COLLECTIVE_FIELDS.items():
+            if field not in col:
+                raise ValueError(f"collectives missing {field!r}")
+            if not isinstance(col[field], typ):
+                raise ValueError(
+                    f"collectives.{field} must be {typ.__name__}, "
+                    f"got {type(col[field]).__name__}")
+        if col["sharded_operand_bytes"] <= 0 or col["gspmd_operand_bytes"] <= 0:
+            raise ValueError("collective byte counts must be > 0")
+        if col["reduction"] <= 1.0:
+            raise ValueError(
+                f"collectives.reduction must be > 1 (the shard-local "
+                f"merge must beat GSPMD), got {col['reduction']}")
+    if multi and "crossover" not in doc:
+        raise ValueError("crossover section is required at devices > 1")
+    if "crossover" in doc:
+        x = doc["crossover"]
+        for key in ("row_max_qps", "batch_max_qps", "batch_vs_row"):
+            if key not in x:
+                raise ValueError(f"crossover missing {key!r}")
+            if not isinstance(x[key], float) or x[key] <= 0:
+                raise ValueError(f"crossover.{key} must be a positive "
+                                 f"float, got {x[key]!r}")
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:

@@ -19,6 +19,7 @@ MODULES = {
     "fig7a": "benchmarks.bench_order_scaling",
     "fig7bc": "benchmarks.bench_multidev",
     "ingest": "benchmarks.bench_ingest",
+    "serve": "benchmarks.bench_serve",
     "lm_step": "benchmarks.bench_lm_step",
 }
 

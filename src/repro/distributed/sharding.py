@@ -145,10 +145,13 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-# Serving (repro.serve): per-mode Kruskal-product tables C^(n) ∈ (I_n, R)
-# are ROW-sharded over the data axis — the same layout the strata training
-# flavors use for factor shards, so a trained sharded run hands its layout
-# straight to the server.
+# Serving (repro.serve): two table layouts behind one TuckerServer API.
+# ROW mode shards each per-mode Kruskal-product table C^(n) ∈ (I_n, R)
+# over the data axis — the same layout the strata training flavors use
+# for factor shards, so a trained sharded run hands its layout straight
+# to the server.  BATCH mode replicates the tables and splits request
+# batches over data instead (small-table / high-QPS deployments); the
+# automatic choice between them lives in repro.serve.policy.
 RULES_SERVE: dict[str, tuple[str, ...]] = {"serve_rows": ("data",)}
 
 
@@ -162,6 +165,14 @@ def serve_row_sharding(mesh: Mesh, shape: Sequence[int]) -> NamedSharding:
     """
     return NamedSharding(
         mesh, spec_for(("serve_rows", None), shape, mesh, RULES_SERVE))
+
+
+def serve_table_replication(mesh: Mesh) -> NamedSharding:
+    """The batch-sharded serving layout for the C^(n) tables: every
+    device holds a full replica; the request batch (not the table) is
+    what splits over ``data``.  The complement of ``serve_row_sharding``
+    — see ``repro.serve.policy`` for when each pays."""
+    return replicated(mesh)
 
 
 # Cache leaves use positional axis conventions (see launch.steps):

@@ -11,12 +11,22 @@ percentiles, sustained queries/s, and the (bounded) compile count.
         --dims 300,200,40 --nnz 30000 --train-steps 200 \
         --requests 200 --microbatch 256 --backend pallas_interpret
 
-``--sharded`` serves the per-mode tables row-sharded over the host mesh
-(forced device counts via XLA_FLAGS work the same as for training).
+``--sharded`` serves the per-mode tables over the host mesh (forced
+device counts via XLA_FLAGS work the same as for training);
+``--shard-mode {auto,row,batch}`` picks the layout (``auto`` consults
+``serve.policy`` with ``--expected-qps``).
+
+``--qps RATE --duration SECONDS`` switches the driver to the CLOSED-LOOP
+front end (``repro.serve.frontend``): concurrent clients offer ``RATE``
+queries/s through the asyncio microbatch queue with real admission
+control — ``--admission-max-queue`` bounds waiting queries,
+``--admission-deadline-ms`` sheds stale ones at flush — and the report
+is achieved QPS, shed counts, and per-bucket latency percentiles.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import logging
 import time
 
@@ -29,7 +39,10 @@ from repro.core import fasttucker as ft
 from repro.data.synthetic import ratings_tensor
 from repro.distributed import get_strategy
 from repro.launch.mesh import make_host_mesh
-from repro.serve import TuckerServer, load_params_from_checkpoint
+from repro.serve import (
+    AdmissionConfig, TuckerServer, load_params_from_checkpoint,
+    run_closed_loop,
+)
 
 log = logging.getLogger("repro.serve_tucker")
 
@@ -69,7 +82,13 @@ def main() -> None:
     ap.add_argument("--backend", default=None,
                     help="kernel backend: xla | pallas | pallas_interpret")
     ap.add_argument("--sharded", action="store_true",
-                    help="row-shard the serving tables over the host mesh")
+                    help="serve the tables sharded over the host mesh")
+    ap.add_argument("--shard-mode", default="auto",
+                    choices=("auto", "row", "batch"),
+                    help="sharded table layout (auto → serve.policy "
+                         "decides from table bytes × --expected-qps)")
+    ap.add_argument("--expected-qps", type=float, default=None,
+                    help="declared traffic for the auto shard policy")
     ap.add_argument("--requests", type=int, default=200,
                     help="number of query batches to stream")
     ap.add_argument("--max-request", type=int, default=512,
@@ -78,6 +97,21 @@ def main() -> None:
     ap.add_argument("--microbatch", type=int, default=256,
                     help="queue flush threshold (queries per served batch)")
     ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--qps", type=float, default=None,
+                    help="closed-loop mode: offered query rate (switches "
+                         "the driver to the async front end)")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="closed-loop mode: seconds of offered load")
+    ap.add_argument("--concurrency", type=int, default=16,
+                    help="closed-loop mode: number of clients")
+    ap.add_argument("--admission-max-queue", type=int, default=4096,
+                    help="bounded queue: max waiting queries before "
+                         "submissions shed")
+    ap.add_argument("--admission-deadline-ms", type=float, default=200.0,
+                    help="shed queued requests older than this at flush")
+    ap.add_argument("--admission-max-wait-ms", type=float, default=2.0,
+                    help="flush timer: max time a lone request waits "
+                         "for a microbatch to fill")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
@@ -102,11 +136,46 @@ def main() -> None:
         params = _train_and_save(args, train_t, cfg, ckpt)
 
     mesh = make_host_mesh() if args.sharded else None
-    server = TuckerServer(params, backend=backend, mesh=mesh)
+    server = TuckerServer(params, backend=backend, mesh=mesh,
+                          shard_mode=args.shard_mode if mesh else "auto",
+                          expected_qps=args.expected_qps)
     r, m = rmse_mae(params, test_t, ft.predict)
-    log.info("serving %s (backend=%s, sharded=%s) — held-out rmse %.4f "
+    log.info("serving %s (backend=%s, shard_mode=%s) — held-out rmse %.4f "
              "mae %.4f", "×".join(map(str, dims)), backend,
-             bool(mesh), float(r), float(m))
+             server.shard_mode, float(r), float(m))
+    if server.shard_decision is not None:
+        log.info("shard policy: %s", server.shard_decision)
+
+    if args.qps is not None:
+        # ---- closed-loop async front end with admission control -----------
+        admission = AdmissionConfig(
+            max_queue=args.admission_max_queue,
+            deadline_ms=args.admission_deadline_ms,
+            microbatch=args.microbatch,
+            max_wait_ms=args.admission_max_wait_ms,
+        )
+        report = run_closed_loop(
+            server, qps=args.qps, duration_s=args.duration,
+            concurrency=args.concurrency, max_request=args.max_request,
+            admission=admission,
+            request_pool=np.asarray(test_t.indices, np.int32),
+            seed=args.seed + 1,
+        )
+        log.info("closed loop: offered %.0f q/s → achieved %.0f q/s over "
+                 "%.1fs (%d served / %d shed-queue / %d shed-deadline), "
+                 "latency p50 %.2fms p99 %.2fms across %d flushes",
+                 report["offered_qps"], report["achieved_qps"],
+                 report["duration_s"], report["served_requests"],
+                 report["shed_queue_full"], report["shed_deadline"],
+                 report["latency_ms"]["p50"] or float("nan"),
+                 report["latency_ms"]["p99"] or float("nan"),
+                 report["flushes"])
+        for bucket, row in report["by_bucket"].items():
+            log.info("  bucket %s: p50 %.2fms p95 %.2fms p99 %.2fms "
+                     "(%d requests)", bucket, row["p50"], row["p95"],
+                     row["p99"], row["count"])
+        print(json.dumps(report, indent=1))
+        return
 
     # ---- microbatch queue over a stream of variable-size requests ----------
     rng = np.random.default_rng(args.seed + 1)

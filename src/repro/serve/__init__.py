@@ -22,15 +22,27 @@ use) served from the factors the trainers checkpoint.
 Layout:
 
     ``engine``     ``TuckerServer`` (predict / reconstruct_rows / top_k),
-                   checkpoint loading, kernel-backend routing, sharded mode
+                   checkpoint loading, kernel-backend routing, sharded
+                   modes (row / batch) with shard-local query programs
+    ``policy``     automatic row- vs batch-sharding decision
+                   (table bytes × expected QPS)
     ``bucketing``  fixed-shape request bucketing for a bounded jit cache
+    ``frontend``   asyncio microbatch front end: bounded-queue admission,
+                   shed-on-deadline, per-bucket latency percentiles, and
+                   the closed-loop load harness
 
-Drivers: ``repro.launch.serve_tucker`` (CLI with a microbatch queue),
-``examples/serve_batched.py`` (train → checkpoint → serve end to end),
-``benchmarks/bench_serve.py`` (batched vs per-query throughput).
+Drivers: ``repro.launch.serve_tucker`` (CLI with a microbatch queue and a
+closed-loop ``--qps`` mode), ``examples/serve_batched.py`` (train →
+checkpoint → serve end to end), ``benchmarks/bench_serve.py`` (batched vs
+per-query throughput, sharded collective-bytes, closed-loop latency).
 """
 from .bucketing import bucket_for, bucket_ladder, split_batch
 from .engine import TuckerServer, load_params_from_checkpoint
+from .frontend import (
+    AdmissionConfig, FrontendStats, RequestShed, ServeFrontend,
+    run_closed_loop,
+)
+from .policy import ShardDecision, ShardPolicy, choose_shard_mode
 
 __all__ = [
     "TuckerServer",
@@ -38,4 +50,12 @@ __all__ = [
     "bucket_ladder",
     "bucket_for",
     "split_batch",
+    "AdmissionConfig",
+    "FrontendStats",
+    "RequestShed",
+    "ServeFrontend",
+    "run_closed_loop",
+    "ShardDecision",
+    "ShardPolicy",
+    "choose_shard_mode",
 ]

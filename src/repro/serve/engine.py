@@ -21,11 +21,30 @@ rows of C against the identity ARE the cached coefficients — so ``"xla"``,
 kernels on the hot path, not a serving-only code fork.
 
 Requests are padded onto a fixed bucket ladder (``repro.serve.bucketing``)
-so the jit cache stays bounded; the padded index buffer is donated on
-accelerators. With ``mesh=`` the tables row-shard over the ``data`` axis
-(``distributed.sharding.serve_row_sharding`` — the strata training layout)
-and a shard_map predict reassembles per-mode coefficient rows with a single
-fused ``psum`` gather at the output.
+so the jit cache stays bounded; every entry point's padded index buffer is
+donated on accelerators.
+
+Sharded serving (``mesh=``) comes in two modes behind one API, chosen by
+``shard_mode`` (``repro.serve.policy`` decides under ``"auto"``):
+
+  * ``"row"`` — tables row-shard over ``data`` (the strata training
+    layout).  Every query runs a hand-written ``shard_map`` program with
+    explicitly small collectives instead of whatever gathers GSPMD would
+    pick: ``predict`` reassembles coefficient rows with one fused psum;
+    ``top_k`` scores ONLY the local row shard of C^(t), takes a local
+    ``lax.top_k`` and merges the M·k ``(score, global id)`` candidates
+    with one all-gather — the flash-decode shard-merge idiom — so the
+    per-query collective payload is O(B·R + M·k·B), not O(rows);
+    ``reconstruct_rows`` shards the output over the largest free mode and
+    all-gathers only the smaller tables plus the result blocks.
+  * ``"batch"`` — tables replicated, request batches split over ``data``
+    (``sharding.serve_table_replication``): zero per-query collectives,
+    throughput scales with M — the small-table / high-QPS deployment.
+
+Before this split existed, ``top_k``/``reconstruct_rows`` on a ``mesh=``
+server silently ran against whatever layout GSPMD chose for the sharded
+tables; both now have real shard-local programs in both modes, and an
+unknown ``shard_mode`` raises instead of degrading.
 """
 from __future__ import annotations
 
@@ -41,12 +60,17 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.fasttucker import FastTuckerParams
 from repro.core.fasttucker import predict as ft_predict
 from repro.core.kruskal import mode_products
-from repro.distributed.sharding import replicated, serve_row_sharding
+from repro.distributed.sharding import (
+    serve_row_sharding, serve_table_replication,
+)
 from repro.kernels import dispatch
 
 from .bucketing import (
     DEFAULT_MAX_BUCKET, DEFAULT_MIN_BUCKET, bucket_ladder, split_batch,
 )
+from .policy import ShardDecision, ShardPolicy, choose_shard_mode
+
+_LETTERS = "abcdefghijklmnop"
 
 
 # ---------------------------------------------------------------------------
@@ -105,29 +129,28 @@ def load_params_from_checkpoint(
 
 
 # ---------------------------------------------------------------------------
-# jitted query kernels (module-level so all servers share one jit cache)
+# query kernel bodies (plain functions: per-server jits wrap them so the
+# index buffer can be donated, and the batch-sharded mode reuses them
+# verbatim inside shard_map — bitwise the unsharded computation per chunk)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("mode", "true_dims"))
-def _reconstruct_bucket(tables, ids, mode, true_dims):
+def _reconstruct_impl(tables, ids, mode, true_dims):
     """Factored slice reconstruction: (B, *dims except mode), f32 accum."""
     N = len(tables)
     rows = tables[mode][ids]                       # (B, R)
-    letters = "abcdefghijklmnop"
     operands, subs = [rows], ["zr"]
     out = "z"
     for n in range(N):
         if n == mode:
             continue
         operands.append(tables[n][: true_dims[n]])
-        subs.append(f"{letters[n]}r")
-        out += letters[n]
+        subs.append(f"{_LETTERS[n]}r")
+        out += _LETTERS[n]
     return jnp.einsum(",".join(subs) + "->" + out, *operands,
                       preferred_element_type=jnp.float32)
 
 
-@partial(jax.jit, static_argnames=("mode", "target", "k", "true_target_dim"))
-def _top_k_bucket(tables, colsums, ids, mode, target, k, true_target_dim):
+def _top_k_impl(tables, colsums, ids, mode, target, k, true_target_dim):
     """(scores, item ids): rank ``target``-mode entries for each ``ids`` row,
     remaining modes marginalized by their column sums (f32 scores even for
     bf16 tables — the colsums are kept f32 and the dot accumulates f32)."""
@@ -137,7 +160,21 @@ def _top_k_bucket(tables, colsums, ids, mode, target, k, true_target_dim):
             w = w * colsums[n][None, :]
     scores = jnp.matmul(w, tables[target][:true_target_dim].T,
                         preferred_element_type=jnp.float32)  # (B, I_target)
-    return jax.lax.top_k(scores, k)
+    values, items = jax.lax.top_k(scores, k)
+    return values, items
+
+
+def _psum_row_gather(table, ids, block_rows, axis="data"):
+    """Gather global ``ids`` rows from a row-sharded table: each row lives
+    on exactly one device, so zero-masking the out-of-shard rows and one
+    fused psum IS the gather (exact in any float dtype — the other shards
+    contribute literal zeros).  Payload: one (B, R) all-reduce."""
+    me = jax.lax.axis_index(axis)
+    local = ids - me * block_rows
+    valid = (local >= 0) & (local < block_rows)
+    safe = jnp.clip(local, 0, block_rows - 1)
+    rows = table[safe] * valid[:, None].astype(table.dtype)
+    return jax.lax.psum(rows, axis)
 
 
 # ---------------------------------------------------------------------------
@@ -156,13 +193,27 @@ class TuckerServer:
         Kernel backend for the prediction contraction (named registry;
         default resolves ``$REPRO_KERNEL_BACKEND`` then ``"xla"``).
     mesh : jax.sharding.Mesh | None
-        Serve the C^(n) tables row-sharded over the mesh's ``data`` axis;
-        predict reassembles coefficient rows with one fused psum gather.
+        Serve the C^(n) tables sharded over the mesh's ``data`` axis, in
+        the layout ``shard_mode`` selects.
+    shard_mode : str
+        ``"row"`` (tables row-sharded, shard-local query programs),
+        ``"batch"`` (tables replicated, request batches split over
+        ``data``) or ``"auto"`` (``repro.serve.policy`` decides from
+        table bytes × ``expected_qps``; the decision is recorded on
+        ``self.shard_decision``).  Ignored without ``mesh`` — except that
+        explicitly asking for a sharded mode then raises.
+    expected_qps : float | None
+        Declared query rate, consumed by the ``"auto"`` policy only.
+    policy : ShardPolicy | None
+        Threshold overrides for the ``"auto"`` decision.
     max_bucket / min_bucket : int
         Request bucket ladder bounds (see ``repro.serve.bucketing``).
+        Batch-sharded servers round every bucket up to a multiple of the
+        ``data`` extent so each device gets an equal request chunk.
     donate : "auto" | bool
-        Donate the padded index buffer into the hot loop. "auto" enables
-        it off-CPU only (CPU XLA cannot donate and would warn per call).
+        Donate the padded index buffer into the hot loops — predict,
+        top_k AND reconstruct_rows ("auto" enables it off-CPU only;
+        CPU XLA cannot donate and would warn per call).
     table_dtype : str | None
         Storage dtype for the cached C^(n) tables (and the synthetic
         identity core factors). ``None`` keeps the params' dtype — so
@@ -179,6 +230,9 @@ class TuckerServer:
         *,
         backend: str | None = None,
         mesh=None,
+        shard_mode: str = "auto",
+        expected_qps: float | None = None,
+        policy: ShardPolicy | None = None,
         max_bucket: int = DEFAULT_MAX_BUCKET,
         min_bucket: int = DEFAULT_MIN_BUCKET,
         donate: str | bool = "auto",
@@ -218,8 +272,35 @@ class TuckerServer:
         if donate == "auto":
             donate = jax.default_backend() != "cpu"
 
+        # ---- sharded-mode resolution (explicit, never silent) -------------
         self.mesh = mesh
+        self.shard_decision: ShardDecision | None = None
         if mesh is None:
+            if shard_mode in ("row", "batch"):
+                raise ValueError(
+                    f"shard_mode={shard_mode!r} requires mesh=")
+            self.shard_mode = "none"
+        else:
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'data' axis, got {mesh.axis_names}")
+            if shard_mode == "auto":
+                self.shard_decision = choose_shard_mode(
+                    sum(int(t.nbytes) for t in tables),
+                    int(mesh.shape["data"]), expected_qps, policy)
+                self.shard_mode = self.shard_decision.mode
+            elif shard_mode in ("row", "batch"):
+                self.shard_mode = shard_mode
+            else:
+                raise ValueError(
+                    f"unknown shard_mode {shard_mode!r} "
+                    "(want 'auto' | 'row' | 'batch')")
+
+        # ---- per-mode table placement + compiled query programs ------------
+        # (per-instance jits: the compile cache — and its bucket-ladder
+        # bound — belongs to one server, and every entry point's padded
+        # index buffer is donated into its hot loop off-CPU.)
+        if self.shard_mode == "none":
             self._tables = tuple(tables)
             self._block_rows = None
             backend_name = self.backend
@@ -228,12 +309,16 @@ class TuckerServer:
                 return ft_predict(FastTuckerParams(tables_, eyes_), idx,
                                   backend=backend_name)
 
-            # per-instance jit: the compile cache (and its bucket-ladder
-            # bound) belongs to one server, and the padded index buffer is
-            # donated into the hot loop off-CPU.
             self._predict_fn = jax.jit(
                 _predict_impl, donate_argnums=(2,) if donate else ())
-        else:
+            self._top_k_fn = jax.jit(
+                _top_k_impl,
+                static_argnames=("mode", "target", "k", "true_target_dim"),
+                donate_argnums=(2,) if donate else ())
+            self._reconstruct_fn = jax.jit(
+                _reconstruct_impl, static_argnames=("mode", "true_dims"),
+                donate_argnums=(1,) if donate else ())
+        elif self.shard_mode == "row":
             # pad rows to the data-axis multiple, then row-shard each table
             # (strata layout); padding rows are zero ⟹ zero coefficients.
             M = int(mesh.shape["data"])
@@ -245,7 +330,22 @@ class TuckerServer:
                 for t in padded
             )
             self._block_rows = tuple(t.shape[0] // M for t in padded)
-            self._sharded_predict = self._build_sharded_predict(donate)
+            self._predict_fn = self._build_row_predict(donate)
+            self._top_k_fn = self._build_row_top_k(donate)
+            self._reconstruct_fn = self._build_row_reconstruct(donate)
+        else:  # batch
+            M = int(mesh.shape["data"])
+            # every bucket must split evenly over the data axis: round the
+            # ladder up to multiples of M (stays sorted, stays bounded)
+            self.ladder = tuple(sorted({-(-b // M) * M for b in self.ladder}))
+            self._tables = tuple(
+                jax.device_put(t, serve_table_replication(mesh))
+                for t in tables
+            )
+            self._block_rows = None
+            self._predict_fn = self._build_batch_predict(donate)
+            self._top_k_fn = self._build_batch_top_k(donate)
+            self._reconstruct_fn = self._build_batch_reconstruct(donate)
 
     # -- construction helpers -------------------------------------------------
 
@@ -257,7 +357,9 @@ class TuckerServer:
         params, _ = load_params_from_checkpoint(directory, step, dims)
         return cls(params, **kw)
 
-    def _build_sharded_predict(self, donate: bool):
+    # -- row-sharded query programs (shard-local + one small collective) ------
+
+    def _build_row_predict(self, donate: bool):
         from jax.experimental.shard_map import shard_map
 
         mesh, N = self.mesh, self.order
@@ -287,7 +389,193 @@ class TuckerServer:
             out_specs=P(),
             check_rep=False,
         )
-        return jax.jit(sharded, donate_argnums=(1,) if donate else ())
+        # signature-compatible with the unsharded/batch predict (eyes are
+        # already closed over): predict() calls every mode identically
+        fn = jax.jit(sharded, donate_argnums=(1,) if donate else ())
+
+        def call(tables, _eyes, idx):
+            return fn(tables, idx)
+
+        call.__wrapped_jit__ = fn
+        return call
+
+    def _build_row_top_k(self, donate: bool):
+        """Shard-local top-k merge: score ONLY the local row shard of
+        C^(t), take a local ``lax.top_k``, all-gather the M·k_local
+        ``(score, global id)`` candidates and reduce them with one final
+        top-k — the flash-decode shard-merge idiom.  The only collectives
+        are one (B, R) psum (coefficient-row gather) and one O(M·k·B)
+        all-gather; GSPMD's layout-chosen alternative gathers O(rows)."""
+        from jax.experimental.shard_map import shard_map
+
+        mesh, N = self.mesh, self.order
+        block_rows = self._block_rows
+
+        @partial(jax.jit,
+                 static_argnames=("mode", "target", "k", "true_target_dim"),
+                 donate_argnums=(2,) if donate else ())
+        def fn(tables, colsums, ids, mode, target, k, true_target_dim):
+            tb = block_rows[target]
+            # a shard can contribute at most tb rows; min(k, tb) candidates
+            # per shard always cover the global top-k (Σ_d min(k, valid_d)
+            # ≥ k whenever Σ_d valid_d = I_t ≥ k)
+            k_local = min(k, tb)
+
+            def local_fn(tables, colsums, ids):
+                me = jax.lax.axis_index("data")
+                w = _psum_row_gather(tables[mode], ids, block_rows[mode])
+                for n in range(N):
+                    if n not in (mode, target):
+                        w = w * colsums[n][None, :]
+                # (B, tb): identical contraction per output element as the
+                # full matmul — the shard is a column slice of the scores
+                scores = jnp.matmul(w, tables[target].T,
+                                    preferred_element_type=jnp.float32)
+                gids = me * tb + jax.lax.broadcasted_iota(
+                    jnp.int32, scores.shape, 1)
+                # padding rows (beyond the true dim) must never win
+                scores = jnp.where(gids < true_target_dim, scores, -jnp.inf)
+                s_loc, i_loc = jax.lax.top_k(scores, k_local)
+                g_loc = me * tb + i_loc.astype(jnp.int32)
+                # ONE small collective: all-gather the candidate triples.
+                # Shard-major candidate order preserves the ascending-id
+                # tie-break lax.top_k applies on the unsharded scores.
+                cs = jax.lax.all_gather(s_loc, "data")   # (M, B, k_local)
+                cg = jax.lax.all_gather(g_loc, "data")
+                B = ids.shape[0]
+                cs = cs.transpose(1, 0, 2).reshape(B, -1)
+                cg = cg.transpose(1, 0, 2).reshape(B, -1)
+                s, j = jax.lax.top_k(cs, k)
+                return s, jnp.take_along_axis(cg, j, axis=1)
+
+            sharded = shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(tuple(P("data", None) for _ in range(N)),
+                          tuple(P() for _ in range(N)), P()),
+                out_specs=(P(), P()),
+                check_rep=False,
+            )
+            return sharded(tables, colsums, ids)
+
+        return fn
+
+    def _build_row_reconstruct(self, donate: bool):
+        """Shard-local reconstruction: gather the pinned-mode coefficient
+        rows with one (B, R) psum, compute the output block owned by the
+        local rows of the LARGEST free mode, and let the out_spec carry the
+        block concatenation.  Only the smaller free modes' tables are
+        all-gathered — the collective payload is the (unavoidable) result
+        plus the small tables, never the big one."""
+        from jax.experimental.shard_map import shard_map
+
+        mesh, N = self.mesh, self.order
+        block_rows = self._block_rows
+
+        @partial(jax.jit, static_argnames=("mode", "true_dims"),
+                 donate_argnums=(1,) if donate else ())
+        def fn(tables, ids, mode, true_dims):
+            others = [n for n in range(N) if n != mode]
+            n1 = max(others, key=lambda n: true_dims[n])
+            pos = 1 + others.index(n1)          # n1's output axis
+
+            def local_fn(tables, ids):
+                w = _psum_row_gather(tables[mode], ids, block_rows[mode])
+                operands, subs = [w], ["zr"]
+                out = "z"
+                for n in others:
+                    if n == n1:
+                        operands.append(tables[n])      # local row block
+                    else:
+                        full = jax.lax.all_gather(tables[n], "data",
+                                                  tiled=True)
+                        operands.append(full[: true_dims[n]])
+                    subs.append(f"{_LETTERS[n]}r")
+                    out += _LETTERS[n]
+                return jnp.einsum(",".join(subs) + "->" + out, *operands,
+                                  preferred_element_type=jnp.float32)
+
+            out_axes: list = [None] * N
+            out_axes[pos] = "data"
+            sharded = shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(tuple(P("data", None) for _ in range(N)), P()),
+                out_specs=P(*out_axes),
+                check_rep=False,
+            )
+            out = sharded(tables, ids)
+            # trim n1's row padding (pad rows are zeros, but the caller
+            # gets exactly (B, *true other dims) like every other mode)
+            return jax.lax.slice_in_dim(out, 0, true_dims[n1], axis=pos)
+
+        return fn
+
+    # -- batch-sharded query programs (replicated tables, split batches) ------
+
+    def _build_batch_predict(self, donate: bool):
+        from jax.experimental.shard_map import shard_map
+
+        mesh, N, backend = self.mesh, self.order, self.backend
+
+        def local_fn(tables, eyes, idx):
+            # full tables, a 1/M slice of the batch: bitwise the unsharded
+            # computation per request row, zero collectives.
+            return ft_predict(FastTuckerParams(tables, eyes), idx,
+                              backend=backend)
+
+        sharded = shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(tuple(P(None, None) for _ in range(N)),
+                      tuple(P(None, None) for _ in range(N)),
+                      P("data", None)),
+            out_specs=P("data"),
+            check_rep=False,
+        )
+        return jax.jit(sharded, donate_argnums=(2,) if donate else ())
+
+    def _build_batch_top_k(self, donate: bool):
+        from jax.experimental.shard_map import shard_map
+
+        mesh, N = self.mesh, self.order
+
+        @partial(jax.jit,
+                 static_argnames=("mode", "target", "k", "true_target_dim"),
+                 donate_argnums=(2,) if donate else ())
+        def fn(tables, colsums, ids, mode, target, k, true_target_dim):
+            def local_fn(tables, colsums, ids):
+                return _top_k_impl(tables, colsums, ids, mode, target, k,
+                                   true_target_dim)
+
+            sharded = shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(tuple(P(None, None) for _ in range(N)),
+                          tuple(P() for _ in range(N)), P("data")),
+                out_specs=(P("data"), P("data")),
+                check_rep=False,
+            )
+            return sharded(tables, colsums, ids)
+
+        return fn
+
+    def _build_batch_reconstruct(self, donate: bool):
+        from jax.experimental.shard_map import shard_map
+
+        mesh, N = self.mesh, self.order
+
+        @partial(jax.jit, static_argnames=("mode", "true_dims"),
+                 donate_argnums=(1,) if donate else ())
+        def fn(tables, ids, mode, true_dims):
+            def local_fn(tables, ids):
+                return _reconstruct_impl(tables, ids, mode, true_dims)
+
+            sharded = shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(tuple(P(None, None) for _ in range(N)), P("data")),
+                out_specs=P("data", *([None] * (N - 1))),
+                check_rep=False,
+            )
+            return sharded(tables, ids)
+
+        return fn
 
     # -- queries --------------------------------------------------------------
 
@@ -318,10 +606,7 @@ class TuckerServer:
             return jnp.zeros((0,), jnp.float32)
         outs = []
         for padded, n in self._bucketed_chunks(indices):
-            if self.mesh is None:
-                pred = self._predict_fn(self._tables, self._eyes, padded)
-            else:
-                pred = self._sharded_predict(self._tables, padded)
+            pred = self._predict_fn(self._tables, self._eyes, padded)
             outs.append(pred if n == padded.shape[0] else pred[:n])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
@@ -338,7 +623,8 @@ class TuckerServer:
             other = tuple(d for n, d in enumerate(self.dims) if n != mode)
             return jnp.zeros((0,) + other, jnp.float32)
         outs = [
-            _reconstruct_bucket(self._tables, chunk, mode, self.dims)[:n]
+            self._reconstruct_fn(self._tables, chunk, mode=mode,
+                                 true_dims=self.dims)[:n]
             for chunk, n in self._bucketed_chunks(ids)
         ]
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
@@ -364,8 +650,9 @@ class TuckerServer:
                     jnp.zeros((0, k), jnp.int32))
         scores, items = [], []
         for chunk, n in self._bucketed_chunks(ids):
-            s, i = _top_k_bucket(self._tables, self._colsums, chunk,
-                                 mode, target, k, self.dims[target])
+            s, i = self._top_k_fn(self._tables, self._colsums, chunk,
+                                  mode=mode, target=target, k=k,
+                                  true_target_dim=self.dims[target])
             scores.append(s[:n])
             items.append(i[:n])
         if len(scores) == 1:
@@ -378,8 +665,9 @@ class TuckerServer:
     def predict_cache_size(self) -> int:
         """Number of compiled predict executables (bucketing keeps this
         ≤ len(self.ladder) across any batch-size distribution)."""
-        fn = (self._sharded_predict if self.mesh is not None
-              else self._predict_fn)
+        fn = self._predict_fn
+        # the row-mode predict wraps its jit in a signature-adapter lambda
+        fn = getattr(fn, "__wrapped_jit__", fn)
         return fn._cache_size()
 
     # -- internals ------------------------------------------------------------

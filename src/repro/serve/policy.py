@@ -1,0 +1,98 @@
+"""Automatic row- vs batch-sharding policy for the serving tables.
+
+Two sharded deployments of the same ``TuckerServer`` API:
+
+  * **row** — the C^(n) tables are ROW-sharded over the ``data`` axis
+    (the strata training layout).  Memory scales 1/M per device, so this
+    is the only option when the tables don't fit replicated; every query
+    pays a small per-call collective (one psum of the gathered coefficient
+    rows, plus — for top_k — one all-gather of the M·k local candidates).
+  * **batch** — the tables are REPLICATED and the request batch is split
+    over ``data``.  Zero per-query collectives and throughput that scales
+    with M, but every device holds the full tables — the small-table /
+    high-QPS deployment.
+
+The decision therefore hinges on exactly two observables: total table
+bytes (can we afford M replicas?) and the expected query rate (is there
+enough traffic for batch-parallelism to pay its replication rent?).
+``ShardPolicy.decide`` encodes that:
+
+    table_bytes > replicate_bytes_ceiling          → row   (must shard)
+    expected_qps ≥ qps_batch_threshold             → batch (traffic pays)
+    otherwise                                      → row   (memory-safe
+                                                    default; matches the
+                                                    pre-policy behavior
+                                                    of ``mesh=``)
+
+Thresholds are dataclass fields so deployments (and tests) can tune them
+without touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardDecision:
+    """The policy's verdict plus the evidence it was made from."""
+
+    mode: str                    # "row" | "batch"
+    table_bytes: int             # total C^(n) bytes (one replica)
+    num_devices: int             # mesh `data` extent M
+    expected_qps: float | None   # declared traffic, None = unknown
+    reason: str                  # one-line human-readable rationale
+
+    def __str__(self) -> str:    # pragma: no cover - logging convenience
+        qps = "unknown" if self.expected_qps is None else f"{self.expected_qps:.0f}"
+        return (f"{self.mode}-sharded (tables {self.table_bytes / 2**20:.1f} MiB, "
+                f"M={self.num_devices}, qps={qps}): {self.reason}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    """Tunable thresholds for :func:`ShardDecision`.
+
+    ``replicate_bytes_ceiling`` is the largest table set a single device
+    is allowed to hold replicated (beyond it, row-sharding is mandatory —
+    that is what row-sharding exists for).  ``qps_batch_threshold`` is the
+    traffic level above which splitting batches over M devices beats
+    paying the row-mode per-query collectives.
+    """
+
+    replicate_bytes_ceiling: int = 256 << 20     # 256 MiB / device
+    qps_batch_threshold: float = 512.0           # queries / second
+
+    def decide(self, table_bytes: int, num_devices: int,
+               expected_qps: float | None = None) -> ShardDecision:
+        if num_devices <= 1:
+            # degenerate mesh: both modes are the unsharded computation;
+            # keep the row layout so checkpoint/table handling is uniform
+            return ShardDecision("row", table_bytes, num_devices,
+                                 expected_qps, "single device — modes "
+                                 "coincide, keeping the row layout")
+        if table_bytes > self.replicate_bytes_ceiling:
+            return ShardDecision(
+                "row", table_bytes, num_devices, expected_qps,
+                f"tables exceed the {self.replicate_bytes_ceiling >> 20} MiB "
+                "replication ceiling — row-sharding is mandatory")
+        if expected_qps is not None and expected_qps >= self.qps_batch_threshold:
+            return ShardDecision(
+                "batch", table_bytes, num_devices, expected_qps,
+                f"tables fit replicated and traffic ≥ "
+                f"{self.qps_batch_threshold:.0f} q/s — batch-parallel "
+                "serving scales with M at zero per-query collectives")
+        return ShardDecision(
+            "row", table_bytes, num_devices, expected_qps,
+            "tables fit replicated but traffic is unknown/low — "
+            "defaulting to the memory-safe row layout")
+
+
+DEFAULT_POLICY = ShardPolicy()
+
+
+def choose_shard_mode(table_bytes: int, num_devices: int,
+                      expected_qps: float | None = None,
+                      policy: ShardPolicy | None = None) -> ShardDecision:
+    """Module-level convenience over :meth:`ShardPolicy.decide`."""
+    return (policy or DEFAULT_POLICY).decide(table_bytes, num_devices,
+                                             expected_qps)

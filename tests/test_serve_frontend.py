@@ -1,0 +1,292 @@
+"""Async serving front end (repro.serve.frontend): microbatch coalescing
+parity, bounded-queue admission, shed-on-deadline, per-bucket latency
+stats, the closed-loop harness, and the bench_serve/v1 schema contract.
+"""
+import asyncio
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FastTuckerConfig
+from repro.core import fasttucker as ft
+from repro.serve import (
+    AdmissionConfig, FrontendStats, RequestShed, ServeFrontend,
+    TuckerServer, run_closed_loop,
+)
+
+DIMS = (9, 7, 5)
+
+
+def _server(**kw):
+    cfg = FastTuckerConfig(dims=DIMS, ranks=(3, 4, 2), core_rank=3,
+                           batch_size=32)
+    params = ft.init_params(jax.random.PRNGKey(0), cfg)
+    return TuckerServer(params, **kw)
+
+
+@pytest.fixture(scope="module")
+def server():
+    return _server()
+
+
+# ---------------------------------------------------------------------------
+# coalescing parity: concurrent submits answer exactly like direct calls
+# ---------------------------------------------------------------------------
+
+def test_concurrent_submits_match_direct_predict(server):
+    rng = np.random.default_rng(0)
+    reqs = [np.stack([rng.integers(0, d, n) for d in DIMS], 1)
+            .astype(np.int32) for n in (1, 3, 7, 12, 5)]
+
+    async def main():
+        async with ServeFrontend(server,
+                                 AdmissionConfig(microbatch=16)) as fe:
+            outs = await asyncio.gather(*(fe.submit(r) for r in reqs))
+        return outs, fe.stats
+
+    outs, stats = asyncio.run(main())
+    for req, out in zip(reqs, outs):
+        np.testing.assert_allclose(
+            out, np.asarray(server.predict(req)), rtol=1e-6, atol=1e-6)
+    assert stats.served == len(reqs)
+    assert stats.served_queries == sum(len(r) for r in reqs)
+    assert stats.flushes <= len(reqs)    # coalescing happened (or 1:1)
+
+
+def test_top_k_query_path(server):
+    ids = np.arange(DIMS[0], dtype=np.int32)
+
+    async def main():
+        async with ServeFrontend(server, query="top_k",
+                                 top_k_args=(0, 3)) as fe:
+            return await asyncio.gather(
+                fe.submit(ids[:4]), fe.submit(ids[4:]))
+
+    (s_a, i_a), (s_b, i_b) = asyncio.run(main())
+    s0, i0 = server.top_k(0, ids, 3)
+    np.testing.assert_allclose(np.concatenate([s_a, s_b]),
+                               np.asarray(s0), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.concatenate([i_a, i_b]),
+                                  np.asarray(i0))
+
+
+def test_frontend_requires_start_and_validates(server):
+    fe = ServeFrontend(server)
+    with pytest.raises(RuntimeError, match="not started"):
+        asyncio.run(fe.submit(np.zeros((1, 3), np.int32)))
+    with pytest.raises(ValueError, match="predict"):
+        ServeFrontend(server, query="reconstruct")
+    with pytest.raises(ValueError, match="top_k_args"):
+        ServeFrontend(server, query="top_k")
+
+    async def empty():
+        async with ServeFrontend(server) as fe2:
+            await fe2.submit(np.zeros((0, 3), np.int32))
+
+    with pytest.raises(ValueError, match="empty"):
+        asyncio.run(empty())
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds_at_submit(server):
+    """A submission that would push the queue past max_queue is rejected
+    immediately and counted — nothing unbounded ever builds up."""
+    async def main():
+        async with ServeFrontend(
+                server, AdmissionConfig(max_queue=8, microbatch=10**6,
+                                        max_wait_ms=50.0)) as fe:
+            t1 = asyncio.ensure_future(
+                fe.submit(np.zeros((8, 3), np.int32)))
+            await asyncio.sleep(0)           # let it enqueue
+            with pytest.raises(RequestShed, match="queue full"):
+                await fe.submit(np.zeros((1, 3), np.int32))
+            shed = fe.stats.shed_queue_full
+            await t1                          # drains on stop/flush timer
+            return shed
+
+    assert asyncio.run(main()) == 1
+
+
+def test_deadline_shed_at_flush(server):
+    """Requests older than the deadline at flush time are dropped (the
+    engine never sees them) and the caller gets RequestShed."""
+    clock = {"t": 0.0}
+
+    async def main():
+        fe = ServeFrontend(
+            server,
+            AdmissionConfig(deadline_ms=10.0, microbatch=4,
+                            max_wait_ms=0.1),
+            clock=lambda: clock["t"])
+        async with fe:
+            stale = asyncio.ensure_future(
+                fe.submit(np.zeros((1, 3), np.int32)))
+            await asyncio.sleep(0)
+            clock["t"] = 1.0                 # 1000ms pass in queue
+            fresh = asyncio.ensure_future(
+                fe.submit(np.zeros((3, 3), np.int32)))
+            with pytest.raises(RequestShed, match="deadline"):
+                await stale
+            out = await fresh                # young request still served
+            return fe.stats, out
+
+    stats, out = asyncio.run(main())
+    assert stats.shed_deadline == 1
+    assert stats.served == 1 and out.shape == (3,)
+
+
+def test_stats_percentiles_and_buckets():
+    st = FrontendStats()
+    assert st.percentiles()["p50"] is None
+    for ms in (1.0, 2.0, 3.0, 4.0):
+        st.record(8, ms)
+    st.record(16, 100.0)
+    p = st.percentiles()
+    assert p["p50"] == pytest.approx(3.0)
+    assert p["p99"] <= 100.0
+    by = st.bucket_percentiles()
+    assert set(by) == {8, 16}
+    assert by[8]["count"] == 4 and by[16]["p50"] == pytest.approx(100.0)
+    assert by[8]["p50"] <= by[8]["p99"]
+
+
+# ---------------------------------------------------------------------------
+# closed-loop harness
+# ---------------------------------------------------------------------------
+
+def test_closed_loop_smoke(server):
+    rep = run_closed_loop(server, qps=500.0, duration_s=0.6,
+                          concurrency=4, max_request=8, seed=1)
+    assert rep["served_requests"] > 0
+    assert rep["achieved_qps"] > 0
+    assert rep["latency_ms"]["p50"] <= rep["latency_ms"]["p99"]
+    assert set(rep["by_bucket"])             # at least one bucket recorded
+    total = (rep["served_requests"] + rep["shed_queue_full"]
+             + rep["shed_deadline"])
+    assert rep["requests"] >= total - rep["shed_deadline"]
+
+
+def test_closed_loop_top_k(server):
+    rep = run_closed_loop(server, qps=300.0, duration_s=0.5,
+                          concurrency=2, max_request=4, query="top_k",
+                          top_k_args=(0, 2), seed=2)
+    assert rep["served_queries"] > 0
+
+
+def test_closed_loop_sheds_under_overload(server):
+    """A queue bound far below the offered load must shed rather than
+    grow — the admission contract under overload."""
+    rep = run_closed_loop(
+        server, qps=50_000.0, duration_s=0.5, concurrency=16,
+        max_request=64,
+        admission=AdmissionConfig(max_queue=32, microbatch=32,
+                                  deadline_ms=5.0),
+        seed=3)
+    assert rep["shed_queue_full"] + rep["shed_deadline"] > 0
+
+
+# ---------------------------------------------------------------------------
+# bench_serve/v1 schema contract
+# ---------------------------------------------------------------------------
+
+def _serve_doc(devices=1):
+    doc = {
+        "schema": "bench_serve/v1",
+        "config": {"dims": [9, 7, 5], "rank": 3, "core_rank": 3,
+                   "backend": "xla", "devices": devices, "microbatch": 64},
+        "throughput": {"per_query_qps": 1e4, "bucketed_qps": 2e5,
+                       "speedup": 20.0, "sweep_compiles": 7,
+                       "ladder_bound": 9},
+        "closed_loop": {"rows": [{
+            "shard_mode": "none", "query": "predict",
+            "offered_qps": 1e3, "achieved_qps": 9e2,
+            "p50_ms": 5.0, "p99_ms": 12.0,
+            "served_requests": 100, "shed": 0,
+        }]},
+    }
+    if devices > 1:
+        doc["collectives"] = {
+            "devices": devices, "bucket": 64, "k": 5,
+            "sharded_operand_bytes": 1000, "gspmd_operand_bytes": 9000,
+            "reduction": 9.0,
+        }
+        doc["crossover"] = {"row_max_qps": 1e3, "batch_max_qps": 2e3,
+                            "batch_vs_row": 2.0}
+    return doc
+
+
+def test_validate_bench_serve_accepts_good_docs():
+    from benchmarks.common import validate_bench_serve
+
+    validate_bench_serve(_serve_doc(devices=1))
+    validate_bench_serve(_serve_doc(devices=4))
+
+
+def test_validate_bench_serve_rejects_breakage():
+    from benchmarks.common import validate_bench_serve
+
+    good = _serve_doc(devices=4)
+    breakages = [
+        {"schema": "bench_serve/v0"},
+        {"throughput": {**good["throughput"], "sweep_compiles": 99}},
+        {"closed_loop": {"rows": []}},
+        {"closed_loop": {"rows": [
+            {**good["closed_loop"]["rows"][0], "p50_ms": 50.0}]}},
+        {"collectives": {**good["collectives"], "reduction": 0.9}},
+        {"crossover": {**good["crossover"], "batch_vs_row": -1.0}},
+    ]
+    for breakage in breakages:
+        with pytest.raises(ValueError):
+            validate_bench_serve({**good, **breakage})
+    # multi-device docs must carry the collective evidence at all
+    for dropped in ("collectives", "crossover"):
+        doc = _serve_doc(devices=4)
+        del doc[dropped]
+        with pytest.raises(ValueError, match=dropped):
+            validate_bench_serve(doc)
+    # field type errors
+    doc = _serve_doc(devices=4)
+    doc["collectives"]["sharded_operand_bytes"] = "small"
+    with pytest.raises(ValueError):
+        validate_bench_serve(doc)
+
+
+def test_committed_bench_serve_document_validates():
+    """The BENCH_serve.json at the repo root stays schema-valid (the same
+    contract CI's bench-smoke enforces on a fresh emission)."""
+    from benchmarks.common import validate_bench_serve
+
+    path = Path(__file__).parent.parent / "BENCH_serve.json"
+    validate_bench_serve(json.loads(path.read_text()))
+
+
+# ---------------------------------------------------------------------------
+# CLI closed-loop smoke
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_tucker_cli_closed_loop(tmp_path):
+    import os
+
+    repo = Path(__file__).parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(repo / "src"), env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_tucker",
+         "--dims", "24,18,12", "--nnz", "1200", "--train-steps", "5",
+         "--qps", "400", "--duration", "1.0", "--max-request", "8",
+         "--microbatch", "32", "--concurrency", "4"],
+        capture_output=True, text=True, timeout=600, cwd=repo, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rep = json.loads(out.stdout[out.stdout.index("{"):])
+    assert rep["served_requests"] > 0 and rep["achieved_qps"] > 0

@@ -1,0 +1,344 @@
+"""Sharded serving fast path: shard-local top-k merge, sharded
+reconstruction, the batch-parallel replicated mode, and the row/batch
+policy — parity vs brute-force dense scoring plus the HLO-level
+collective-bytes contract.
+
+Like test_serve.py, the mesh covers whatever devices exist: under the
+multi-device CI tier (REPRO_FORCE_HOST_DEVICES=4) every test exercises
+real 4-shard tables, local top-k + candidate all-gather, and split
+batches; on one device the same programs degenerate to M=1 (and the
+multi-device-only assertions skip).
+
+The hypothesis property (top-k invariant to bucket ladder and batch
+split) runs when hypothesis is installed (requirements-dev); the
+example-based fallbacks always run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import FastTuckerConfig
+from repro.core import fasttucker as ft
+from repro.core.kruskal import dense_reconstruct
+from repro.launch.mesh import make_host_mesh
+from repro.serve import (
+    ShardPolicy, TuckerServer, choose_shard_mode,
+)
+
+DIMS = (9, 7, 5)
+
+
+def _params(dims=DIMS, ranks=(3, 4, 2), core_rank=3, seed=0):
+    cfg = FastTuckerConfig(dims=dims, ranks=ranks, core_rank=core_rank,
+                           batch_size=32)
+    return ft.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+@pytest.fixture(scope="module")
+def model():
+    params = _params()
+    dense = np.asarray(dense_reconstruct(params.factors,
+                                         params.core_factors))
+    return params, dense
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def _servers(params, mesh):
+    return {
+        "row": TuckerServer(params, mesh=mesh, shard_mode="row"),
+        "batch": TuckerServer(params, mesh=mesh, shard_mode="batch"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# parity vs brute-force dense scoring (both sharded modes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shard_mode", ("row", "batch"))
+def test_sharded_top_k_matches_brute_force(model, mesh, shard_mode):
+    params, dense = model
+    srv = TuckerServer(params, mesh=mesh, shard_mode=shard_mode)
+    for mode, target, marg in ((0, 1, 2), (1, 0, 2), (0, 2, 1)):
+        brute = dense.sum(axis=marg)                 # (I_mode, I_target)
+        if mode > target:
+            brute = brute.T
+        ids = np.arange(DIMS[mode], dtype=np.int32)
+        k = 4
+        scores, items = srv.top_k(mode, ids, k, target_mode=target)
+        for b, uid in enumerate(ids):
+            order = np.argsort(-brute[uid])[:k]
+            np.testing.assert_allclose(
+                np.asarray(scores[b]), brute[uid][order],
+                rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(
+                brute[uid][np.asarray(items[b])], brute[uid][order],
+                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shard_mode", ("row", "batch"))
+def test_sharded_reconstruct_matches_dense(model, mesh, shard_mode):
+    params, dense = model
+    srv = TuckerServer(params, mesh=mesh, shard_mode=shard_mode)
+    for mode in range(len(DIMS)):
+        ids = np.arange(DIMS[mode], dtype=np.int32)
+        out = np.asarray(srv.reconstruct_rows(mode, ids))
+        want = np.moveaxis(dense, mode, 0)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shard_mode", ("row", "batch"))
+def test_sharded_matches_unsharded_exactly(model, mesh, shard_mode):
+    """Scores AND tie-break order: the shard-merge candidate list is
+    shard-major (= ascending global id), so its final top-k must pick the
+    same item ids as the unsharded ``lax.top_k`` — including ties."""
+    params, _ = model
+    base = TuckerServer(params)
+    srv = TuckerServer(params, mesh=mesh, shard_mode=shard_mode)
+    ids = np.arange(DIMS[0], dtype=np.int32)
+    for k in (1, 3, DIMS[1]):
+        s0, i0 = base.top_k(0, ids, k)
+        s1, i1 = srv.top_k(0, ids, k)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+
+
+def test_sharded_top_k_ties_follow_unsharded_order(mesh):
+    """Constant tables ⟹ every candidate ties; the winner set must be the
+    lowest global ids, exactly what unsharded lax.top_k returns."""
+    dims, J, R = (8, 8, 4), 2, 2
+    factors = tuple(jnp.ones((d, J), jnp.float32) for d in dims)
+    cores = tuple(jnp.ones((J, R), jnp.float32) for _ in dims)
+    params = ft.FastTuckerParams(factors, cores)
+    base = TuckerServer(params)
+    ids = np.arange(dims[0], dtype=np.int32)
+    for shard_mode in ("row", "batch"):
+        srv = TuckerServer(params, mesh=mesh, shard_mode=shard_mode)
+        for k in (1, 3, 8):
+            s0, i0 = base.top_k(0, ids, k)
+            s1, i1 = srv.top_k(0, ids, k)
+            np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+            np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_sharded_bf16_tables(model, mesh):
+    params, _ = model
+    base = TuckerServer(params, table_dtype="bfloat16")
+    for shard_mode in ("row", "batch"):
+        srv = TuckerServer(params, mesh=mesh, shard_mode=shard_mode,
+                           table_dtype="bfloat16")
+        ids = np.arange(DIMS[0], dtype=np.int32)
+        s0, i0 = base.top_k(0, ids, 3)
+        s1, i1 = srv.top_k(0, ids, 3)
+        assert s1.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+
+
+def test_sharded_chunked_over_ladder(model, mesh):
+    """Requests above the largest bucket chunk + concatenate identically
+    in every mode (and the batch ladder stays multiple-of-M)."""
+    params, _ = model
+    base = TuckerServer(params, max_bucket=8, min_bucket=8)
+    ids = np.tile(np.arange(DIMS[0], dtype=np.int32), 3)     # 27 > 8
+    s0, i0 = base.top_k(0, ids, 3)
+    r0 = np.asarray(base.reconstruct_rows(0, ids))
+    for shard_mode in ("row", "batch"):
+        srv = TuckerServer(params, mesh=mesh, shard_mode=shard_mode,
+                           max_bucket=8, min_bucket=8)
+        M = int(mesh.shape["data"])
+        assert all(b % M == 0 for b in srv.ladder) or shard_mode == "row"
+        s1, i1 = srv.top_k(0, ids, 3)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+        np.testing.assert_allclose(np.asarray(srv.reconstruct_rows(0, ids)),
+                                   r0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the collective-bytes contract (multi-device only)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (REPRO_FORCE_HOST_DEVICES)")
+def test_row_top_k_collective_bytes_beat_gspmd(mesh):
+    """The tentpole's HLO assertion: the shard-local merge program moves
+    strictly fewer collective operand bytes than GSPMD compiling the
+    unsharded top_k over the same row-sharded tables, and its payload is
+    O(B·R + M·k·B) — not O(rows).  The scored mode must dwarf B·k for
+    the asymptotics to show (it is the millions-of-candidates axis in a
+    recommender), so this test scores a 600-row mode."""
+    from repro.launch import hlo_analysis
+    from repro.serve.engine import _top_k_impl
+
+    dims = (600, 9, 5)
+    params = _params(dims=dims)
+    srv = TuckerServer(params, mesh=mesh, shard_mode="row")
+    gspmd_fn = jax.jit(_top_k_impl, static_argnames=(
+        "mode", "target", "k", "true_target_dim"))
+    B, k = 32, 5
+    ids = np.zeros(B, np.int32)
+    kw = dict(mode=1, target=0, k=k, true_target_dim=dims[0])
+    fast = hlo_analysis.analyze(srv._top_k_fn.lower(
+        srv._tables, srv._colsums, ids, **kw).compile().as_text())
+    gspmd = hlo_analysis.analyze(gspmd_fn.lower(
+        srv._tables, srv._colsums, ids, **kw).compile().as_text())
+    assert fast["collective_operand_total"] > 0
+    assert (fast["collective_operand_total"]
+            < gspmd["collective_operand_total"]), (fast, gspmd)
+    # payload bound: one (B, R) psum + one all-gather of M·k_local
+    # (score f32, id i32) candidate pairs per request — allow 2× slack
+    # for layout/padding, but nothing O(rows) fits under this
+    M = int(mesh.shape["data"])
+    R = srv.core_rank
+    k_local = min(k, srv._block_rows[0])
+    bound = 2 * (B * R * 4 + M * B * k_local * 8)
+    assert fast["collective_operand_total"] <= bound, (
+        fast["collective_operand_total"], bound)
+    # ...while the GSPMD program's payload scales with the scored rows
+    assert gspmd["collective_operand_total"] >= B * dims[0] * 4 / M
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (REPRO_FORCE_HOST_DEVICES)")
+def test_batch_predict_has_zero_collectives(model, mesh):
+    """Replicated tables + split batches: the whole point is ZERO
+    per-query collectives in the compiled program."""
+    from repro.launch import hlo_analysis
+
+    params, _ = model
+    srv = TuckerServer(params, mesh=mesh, shard_mode="batch")
+    b = srv.ladder[0]
+    idx = np.zeros((b, len(DIMS)), np.int32)
+    txt = srv._predict_fn.lower(srv._tables, srv._eyes,
+                                idx).compile().as_text()
+    assert hlo_analysis.analyze(txt)["collective_operand_total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+def test_policy_decides_row_vs_batch():
+    pol = ShardPolicy(replicate_bytes_ceiling=1 << 20,
+                      qps_batch_threshold=100.0)
+    # single device: always row
+    assert pol.decide(1 << 30, 1, 1e6).mode == "row"
+    # tables too big to replicate: row, regardless of traffic
+    assert pol.decide(2 << 20, 4, 1e6).mode == "row"
+    # small tables + traffic above threshold: batch
+    d = pol.decide(1 << 10, 4, 200.0)
+    assert d.mode == "batch" and "traffic" in d.reason
+    # small tables, unknown/low traffic: the memory-safe row default
+    assert pol.decide(1 << 10, 4, None).mode == "row"
+    assert pol.decide(1 << 10, 4, 50.0).mode == "row"
+    assert "row" in str(pol.decide(1 << 10, 4, 50.0))
+
+
+def test_auto_policy_binds_to_server(model, mesh):
+    params, _ = model
+    lo = TuckerServer(params, mesh=mesh)                    # qps unknown
+    hi = TuckerServer(params, mesh=mesh, expected_qps=1e6)  # heavy traffic
+    M = int(mesh.shape["data"])
+    if M > 1:
+        assert lo.shard_mode == "row" and hi.shard_mode == "batch"
+    else:
+        assert lo.shard_mode == "row" and hi.shard_mode == "row"
+    assert lo.shard_decision is not None
+    assert lo.shard_decision.table_bytes > 0
+    # explicit modes bypass the policy and record no decision
+    assert TuckerServer(params, mesh=mesh,
+                        shard_mode="batch").shard_decision is None
+
+
+def test_policy_threshold_override(model, mesh):
+    params, _ = model
+    tiny_ceiling = ShardPolicy(replicate_bytes_ceiling=1)
+    srv = TuckerServer(params, mesh=mesh, expected_qps=1e6,
+                       policy=tiny_ceiling)
+    # tables exceed a 1-byte ceiling → row even under heavy traffic
+    assert srv.shard_mode == "row"
+    if int(mesh.shape["data"]) > 1:
+        assert "ceiling" in srv.shard_decision.reason
+    else:
+        assert "single device" in srv.shard_decision.reason
+
+
+def test_shard_mode_validation(model, mesh):
+    params, _ = model
+    with pytest.raises(ValueError, match="requires mesh"):
+        TuckerServer(params, shard_mode="row")
+    with pytest.raises(ValueError, match="requires mesh"):
+        TuckerServer(params, shard_mode="batch")
+    with pytest.raises(ValueError, match="unknown shard_mode"):
+        TuckerServer(params, mesh=mesh, shard_mode="gspmd")
+
+
+def test_choose_shard_mode_convenience():
+    assert choose_shard_mode(1 << 10, 4, 1e6).mode == "batch"
+    assert choose_shard_mode(1 << 10, 4).mode == "row"
+
+
+# ---------------------------------------------------------------------------
+# top-k invariance to bucket ladder and batch split
+# ---------------------------------------------------------------------------
+
+def _topk_with_ladder(params, mesh, shard_mode, ids, k, max_bucket,
+                      min_bucket):
+    kw = {} if shard_mode == "none" else dict(mesh=mesh,
+                                              shard_mode=shard_mode)
+    srv = TuckerServer(params, max_bucket=max_bucket,
+                       min_bucket=min_bucket, **kw)
+    s, i = srv.top_k(0, ids, k)
+    return np.asarray(s), np.asarray(i)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=DIMS[1]),      # k
+        st.integers(min_value=0, max_value=3),            # ladder shape a
+        st.integers(min_value=0, max_value=2),            # ladder shape b
+        st.lists(st.integers(min_value=0, max_value=DIMS[0] - 1),
+                 min_size=1, max_size=25),                # the batch
+    )
+    def test_top_k_invariant_to_ladder_and_split(k, a, b, raw_ids):
+        """Property: top-k answers depend only on the model and the ids —
+        never on how the bucket ladder pads or the batch splits."""
+        params = _params()
+        mesh = make_host_mesh()
+        ids = np.asarray(raw_ids, np.int32)
+        ref_s, ref_i = _topk_with_ladder(params, mesh, "none", ids, k,
+                                         2048, 8)
+        max_bucket, min_bucket = 8 << (a + b), 4 << b
+        for shard_mode in ("none", "row", "batch"):
+            s, i = _topk_with_ladder(params, mesh, shard_mode, ids, k,
+                                     max_bucket, min_bucket)
+            np.testing.assert_allclose(s, ref_s, rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(i, ref_i)
+
+
+def test_top_k_invariant_to_ladder_and_split_examples(model, mesh):
+    """Example-based fallback for the property above (always runs)."""
+    params, _ = model
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, DIMS[0], 23).astype(np.int32)
+    k = 3
+    ref_s, ref_i = _topk_with_ladder(params, mesh, "none", ids, k, 2048, 8)
+    for max_bucket, min_bucket in ((8, 4), (16, 8), (64, 4), (2048, 8)):
+        for shard_mode in ("none", "row", "batch"):
+            s, i = _topk_with_ladder(params, mesh, shard_mode, ids, k,
+                                     max_bucket, min_bucket)
+            np.testing.assert_allclose(s, ref_s, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{shard_mode} "
+                                               f"{max_bucket}/{min_bucket}")
+            np.testing.assert_array_equal(i, ref_i)
