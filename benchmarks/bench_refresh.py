@@ -1,0 +1,163 @@
+"""Delta-patch vs full-rebuild latency for online serve refreshes.
+
+The online loop (``repro.launch.online_train``) patches only the dirty
+rows of the serving tables after each bounded refresh
+(``TuckerServer.update_rows``); the alternative is rebuilding every
+C^(n) = A^(n)B^(n) from scratch (``TuckerServer.refresh_tables``).  Both
+publish a new table generation behind the same versioned swap, so the
+only question is latency — this sweep measures it per dirty-row
+fraction:
+
+    row = {dirty_fraction, dirty_rows, patch_ms, rebuild_ms, speedup}
+
+``speedup`` = rebuild_ms / patch_ms — the acceptance contract is that
+the delta patch wins (> 1) at every dirty fraction ≤ 10 %, which is the
+regime bounded refresh steps produce (each K-step window touches
+O(K·|Ψ|) rows).  Above that the balance tilts toward the rebuild — one
+big MXU matmul against ever more scattered row recomputes — so the
+sweep keeps a 25 % point to show the trend toward the rebuild-favored
+regime in the document.
+
+    PYTHONPATH=src python -m benchmarks.bench_refresh \
+        [--smoke] [--out BENCH_refresh.json] [--table-dtype bfloat16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .common import row
+
+SCHEMA = "bench_refresh/v1"
+
+FULL = dict(dims=(60_000, 40_000, 20_000), rank=64, iters=7)
+SMOKE = dict(dims=(8_000, 6_000, 4_000), rank=48, iters=5)
+
+FRACTIONS = (0.01, 0.02, 0.05, 0.10, 0.25)
+# the contract bench + CI assert: delta-patch faster than rebuild here
+CONTRACT_MAX_FRACTION = 0.10
+
+
+def validate(doc: dict) -> None:
+    """Raise ``ValueError`` unless ``doc`` is a valid BENCH_refresh doc."""
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("rows must be a non-empty list")
+    for i, r in enumerate(rows):
+        for field, typ in (("dirty_fraction", float), ("dirty_rows", int),
+                          ("patch_ms", float), ("rebuild_ms", float),
+                          ("speedup", float)):
+            if not isinstance(r.get(field), typ):
+                raise ValueError(f"rows[{i}].{field} must be {typ.__name__}")
+        if r["patch_ms"] <= 0 or r["rebuild_ms"] <= 0:
+            raise ValueError(f"rows[{i}]: latencies must be > 0")
+        if (r["dirty_fraction"] <= CONTRACT_MAX_FRACTION
+                and r["speedup"] <= 1.0):
+            raise ValueError(
+                f"rows[{i}]: delta patch must beat rebuild at dirty "
+                f"fraction {r['dirty_fraction']} (speedup "
+                f"{r['speedup']:.2f} <= 1)")
+
+
+def _median_ms(fn, iters: int) -> float:
+    import jax
+
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e3
+
+
+def measure(smoke: bool, table_dtype: str | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.fasttucker import FastTuckerParams
+    from repro.serve import TuckerServer
+
+    point = SMOKE if smoke else FULL
+    dims, J, iters = point["dims"], point["rank"], point["iters"]
+    rng = np.random.default_rng(0)
+    factors = tuple(
+        jnp.asarray(rng.standard_normal((d, J)), jnp.float32) for d in dims)
+    cores = tuple(
+        jnp.asarray(rng.standard_normal((J, J)), jnp.float32) for _ in dims)
+    srv = TuckerServer(FastTuckerParams(factors, cores), backend="xla",
+                       table_dtype=table_dtype)
+
+    # mode 0 (the largest mode — the expensive table either way)
+    I0 = dims[0]
+
+    def patch(ids, rows_):
+        srv.update_rows(0, ids, rows_)
+        return srv._tables[0]
+
+    def rebuild():
+        srv.refresh_tables()
+        return srv._tables[0]
+
+    # warm both paths' compiles before any timing
+    warm_ids = np.arange(min(32, I0), dtype=np.int32)
+    patch(warm_ids, jnp.asarray(
+        rng.standard_normal((len(warm_ids), J)), jnp.float32))
+    rebuild()
+
+    rows = []
+    for frac in FRACTIONS:
+        f = max(1, int(I0 * frac))
+        ids = np.sort(rng.permutation(I0)[:f]).astype(np.int32)
+        new_rows = jnp.asarray(rng.standard_normal((f, J)), jnp.float32)
+        patch(ids, new_rows)      # compile this size class off the clock
+        patch_ms = _median_ms(lambda: patch(ids, new_rows), iters)
+        rebuild_ms = _median_ms(rebuild, iters)
+        r = {
+            "dirty_fraction": float(frac),
+            "dirty_rows": int(f),
+            "patch_ms": round(patch_ms, 4),
+            "rebuild_ms": round(rebuild_ms, 4),
+            "speedup": round(rebuild_ms / patch_ms, 4),
+        }
+        rows.append(r)
+        row(f"refresh/dirty{frac:g}", patch_ms * 1e3,
+            f"rebuild={rebuild_ms:.2f}ms,speedup={r['speedup']:.2f}x")
+
+    return {
+        "schema": SCHEMA,
+        "generated_by": "benchmarks.bench_refresh",
+        "smoke": smoke,
+        "platform": jax.default_backend(),
+        "config": {"dims": list(dims), "rank": J,
+                   "table_dtype": str(srv.table_dtype),
+                   "final_table_version": srv.table_version},
+        "contract_max_fraction": CONTRACT_MAX_FRACTION,
+        "rows": rows,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI schema + contract check)")
+    ap.add_argument("--table-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--out", default="",
+                    help="write the BENCH_refresh JSON document here")
+    args = ap.parse_args()
+    doc = measure(args.smoke, args.table_dtype)
+    validate(doc)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

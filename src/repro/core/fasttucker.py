@@ -68,6 +68,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import dispatch
 from .sampling import (
@@ -752,6 +753,76 @@ def core_phase_step(
         update_factors=False, update_core=True, backend=cfg.backend,
     )
     return TrainState(params, state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# online refresh (bounded factor-phase catch-up over recent nonzeros)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _refresh_step(
+    state: TrainState,
+    key: jax.Array,
+    indices: jax.Array,
+    values: jax.Array,
+    cfg: FastTuckerConfig,
+    masks: tuple,
+) -> tuple[TrainState, tuple]:
+    """One factor-phase step + dirty-row mask accumulation (one compile,
+    reused across the K refresh steps — the window arrays keep one shape)."""
+    idx, val = sample_batch_arrays(key, indices, values, cfg.batch_size)
+    layout = batch_layout(idx, cfg)
+    lr_a = dynamic_lr(cfg.alpha_a, cfg.beta_a, state.step)
+    fg, _ = factor_phase_gradients(
+        state.params, idx, val, cfg.lambda_a, cfg.lambda_b,
+        backend=cfg.backend, accum_dtype=cfg.accum_dtype, layout=layout,
+    )
+    params = _apply_updates(
+        state.params, idx, fg, lr_a, jnp.asarray(0.0),
+        update_factors=True, update_core=False, backend=cfg.backend,
+        layout=layout,
+    )
+    masks = tuple(
+        m.at[idx[:, n]].set(True) for n, m in enumerate(masks))
+    return TrainState(params, state.step + 1), masks
+
+
+def refresh_steps(
+    state: TrainState,
+    key: jax.Array,
+    indices: jax.Array,
+    values: jax.Array,
+    cfg: FastTuckerConfig,
+    num_steps: int,
+) -> tuple[TrainState, tuple[np.ndarray, ...]]:
+    """K bounded factor-phase SGD steps over a recent-nonzero window.
+
+    The online-training primitive: the paper's one-step stochastic
+    sampling touches only the gathered factor rows per step, so folding a
+    window of NEW nonzeros into the model needs no epoch — K small
+    factor-phase steps (core ``B^(n)`` frozen, exactly
+    ``sgd_step(update_core=False)`` numerics) move only the rows the
+    window samples.  Because the core is frozen, the serving tables
+    C^(n) = A^(n)B^(n) change in exactly those rows, so the returned
+    per-mode dirty-row sets — the union of sampled ``unique_ids`` across
+    all K steps, collected device-side as boolean masks — are precisely
+    the ids ``TuckerServer.update_rows`` must patch.
+
+    Returns ``(state', dirty)`` where ``dirty[n]`` is a sorted int32
+    ``np.ndarray`` of mode-``n`` row ids touched by the refresh.
+    """
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be ≥ 1, got {num_steps}")
+    indices = jnp.asarray(indices)
+    values = jnp.asarray(values)
+    masks = tuple(
+        jnp.zeros((f.shape[0],), jnp.bool_) for f in state.params.factors)
+    for t in range(num_steps):
+        sub = jax.random.fold_in(key, t)
+        state, masks = _refresh_step(state, sub, indices, values, cfg, masks)
+    dirty = tuple(
+        np.nonzero(np.asarray(m))[0].astype(np.int32) for m in masks)
+    return state, dirty
 
 
 def train(

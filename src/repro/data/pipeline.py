@@ -317,10 +317,138 @@ class NonzeroStore:
             json.dump(self.meta, f, indent=1)
         return NonzeroStore.open(path)
 
+    # -- online ingestion ----------------------------------------------------
+    def append(self, indices, values, *, chunk_nnz: int = 1 << 20
+               ) -> "NonzeroStore":
+        """Fold new nonzeros into the per-(stratum, worker) buckets.
+
+        The streaming-ingest half of the online-training loop: the same
+        two-pass discipline as the chunked writer (``build``) — one
+        counting pass to learn each bucket's new fill, one stable scatter
+        pass placing the entries at the running per-bucket offsets — but
+        with the offsets STARTING at the current fills, so appended
+        entries land after the existing ones in order of arrival.  The
+        result is the store ``build`` would have produced on the
+        concatenated nonzeros (same entry order per bucket; the chunk
+        length only regrows, in ``pad_multiple`` steps, when a bucket
+        overflows).
+
+        In-memory stores are patched in place when no bucket overflows
+        (and ``self`` is returned); growth reallocates.  Spilled stores
+        rewrite their memmaps — in place without growth, via a
+        stratum-by-stratum copy into fresh ``.npy`` files (bounded host
+        memory) when they grow — and return a reopened handle; the old
+        handle keeps reading its own snapshot.
+        """
+        from repro.core.sptensor import BlockPartition
+
+        idx = np.ascontiguousarray(np.asarray(indices, np.int32))
+        val = np.ascontiguousarray(np.asarray(values, np.float32))
+        S, M, L, N = self.indices.shape
+        if idx.ndim != 2 or idx.shape[1] != N:
+            raise ValueError(f"indices must be (nnz, {N}), got {idx.shape}")
+        if val.shape != (idx.shape[0],):
+            raise ValueError(
+                f"values shape {val.shape} != ({idx.shape[0]},)")
+        if idx.size and ((idx < 0).any()
+                         or (idx >= np.asarray(self.dims)).any()):
+            raise ValueError(f"indices out of range for dims {self.dims}")
+        if idx.shape[0] == 0:
+            return self
+
+        part = BlockPartition(self.padded_dims, M)
+        pad = int(self.meta["pad_multiple"])
+        nnz = idx.shape[0]
+
+        # pass 1: current fills + new-entry counts → (possibly grown) L
+        fill = self.mask.reshape(S * M, L).sum(axis=1).astype(np.int64)
+        counts = np.zeros(S * M, np.int64)
+        for lo in range(0, nnz, chunk_nnz):
+            sl = slice(lo, min(lo + chunk_nnz, nnz))
+            s_, w_ = part.assign(idx[sl])
+            counts += np.bincount(s_ * M + w_, minlength=S * M)
+        need = int((fill + counts).max())
+        L_new = L if need <= L else ((need + pad - 1) // pad) * pad
+
+        meta = dict(self.meta)
+        meta["nnz"] = self.nnz + nnz
+        meta["chunk_len"] = L_new
+        shapes = {"indices": (S, M, L_new, N), "values": (S, M, L_new),
+                  "mask": (S, M, L_new)}
+
+        if not self.spilled:
+            if L_new == L:
+                arrays = {f: getattr(self, f) for f in _STORE_FIELDS}
+            else:
+                arrays = {f: np.zeros(shapes[f], _STORE_DTYPES[f])
+                          for f in _STORE_FIELDS}
+                for f in _STORE_FIELDS:
+                    arrays[f][:, :, :L] = getattr(self, f)
+        elif L_new == L:
+            arrays = {
+                f: np.load(os.path.join(self.path, f"{f}.npy"),
+                           mmap_mode="r+")
+                for f in _STORE_FIELDS
+            }
+        else:
+            arrays = {
+                f: np.lib.format.open_memmap(
+                    os.path.join(self.path, f"{f}.npy.tmp"), mode="w+",
+                    dtype=_STORE_DTYPES[f], shape=shapes[f])
+                for f in _STORE_FIELDS
+            }
+            for s in range(S):  # stratum-by-stratum: peak host mem O(chunk)
+                for f in _STORE_FIELDS:
+                    arrays[f][s, :, :L] = getattr(self, f)[s]
+
+        # pass 2: the writer's stable bucket-offset scatter, offsets seeded
+        # at the current fills instead of zero
+        flat_idx = arrays["indices"].reshape(S * M, L_new, N)
+        flat_val = arrays["values"].reshape(S * M, L_new)
+        flat_msk = arrays["mask"].reshape(S * M, L_new)
+        offsets = fill.copy()
+        for lo in range(0, nnz, chunk_nnz):
+            sl = slice(lo, min(lo + chunk_nnz, nnz))
+            s_, w_ = part.assign(idx[sl])
+            key = s_ * M + w_
+            order = np.argsort(key, kind="stable")
+            ksort = key[order]
+            first = np.searchsorted(ksort, np.arange(S * M))
+            pos = offsets[ksort] + (np.arange(len(ksort)) - first[ksort])
+            flat_idx[ksort, pos] = idx[sl][order]
+            flat_val[ksort, pos] = val[sl][order]
+            flat_msk[ksort, pos] = True
+            offsets += np.bincount(key, minlength=S * M)
+
+        if self.spilled:
+            for a in arrays.values():
+                a.flush()
+            if L_new != L:
+                for f in _STORE_FIELDS:
+                    os.replace(os.path.join(self.path, f"{f}.npy.tmp"),
+                               os.path.join(self.path, f"{f}.npy"))
+            with open(os.path.join(self.path, _STORE_META_FILE), "w") as f:
+                json.dump(meta, f, indent=1)
+            return NonzeroStore.open(self.path)
+        if L_new == L:
+            self.meta = meta
+            return self
+        return NonzeroStore(arrays["indices"], arrays["values"],
+                            arrays["mask"], meta)
+
 
 # ---------------------------------------------------------------------------
 # host→device stratum prefetcher (double-buffered device_put)
 # ---------------------------------------------------------------------------
+
+class _PrefetchFailure:
+    """Queue sentinel carrying a worker-thread exception to ``take()``."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
 
 class StratumPrefetcher:
     """Issues schedule blocks to device ``depth`` positions ahead of use.
@@ -349,6 +477,7 @@ class StratumPrefetcher:
         self._thread: threading.Thread | None = None
         self._stop: threading.Event | None = None
         self._queue: queue.Queue | None = None
+        self._failure: BaseException | None = None
         self._head = start
         if self.depth:
             self._spawn(start)
@@ -358,29 +487,54 @@ class StratumPrefetcher:
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         load, place, nxt = self._load, self._place, self._next
 
-        def worker(pos: int) -> None:
+        def put(item) -> bool:
             while not stop.is_set():
-                blocks = place(load(pos))
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker(pos: int) -> None:
+            # A load/place failure (e.g. a failed memmap page-in) must not
+            # just kill this thread — that would leave take() blocked on an
+            # empty queue forever.  Park the exception in the queue so the
+            # consumer re-raises it at the position that failed.
+            try:
                 while not stop.is_set():
-                    try:
-                        q.put((pos, blocks), timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-                pos = nxt(pos)
+                    blocks = place(load(pos))
+                    if not put((pos, blocks)):
+                        return
+                    pos = nxt(pos)
+            except BaseException as e:  # noqa: BLE001 — forwarded, not eaten
+                put((pos, _PrefetchFailure(e)))
 
         t = threading.Thread(target=worker, args=(start,),
                              name="stratum-prefetch", daemon=True)
         self._stop, self._queue, self._thread, self._head = stop, q, t, start
+        self._failure = None
         t.start()
 
     def take(self, pos: int):
-        """Device blocks for schedule position ``pos`` (in-order walk)."""
+        """Device blocks for schedule position ``pos`` (in-order walk).
+
+        Re-raises any exception the background load/place hit — at the
+        first take() that reaches the failed position, and on every
+        take() after that (the walk is dead until ``reset``).
+        """
         if self.depth == 0:
             return self._place(self._load(pos))
+        if self._failure is not None:
+            raise self._failure
         if pos != self._head:
             self.reset(pos)
         got, blocks = self._queue.get()
+        if isinstance(blocks, _PrefetchFailure):
+            self._failure = RuntimeError(
+                f"stratum prefetch worker failed loading position {got}")
+            self._failure.__cause__ = blocks.exc
+            raise self._failure
         assert got == pos, f"prefetch walk desync: got {got}, want {pos}"
         self._head = self._next(pos)
         return blocks
@@ -388,6 +542,7 @@ class StratumPrefetcher:
     def reset(self, pos: int) -> None:
         """Re-seed the walk at ``pos`` (after a resume/restore jump)."""
         self.close()
+        self._failure = None
         if self.depth:
             self._spawn(pos)
         else:

@@ -104,6 +104,46 @@ class DistStrategy(abc.ABC):
         """
         return dstate.params
 
+    # -- online refresh ------------------------------------------------------
+
+    def _lift_eval_params(self, plan, dstate: DistState,
+                          state: TrainState) -> DistState:
+        """Lift refreshed global-layout params back into strategy state.
+
+        The inverse of ``eval_params``'s view: the base (local/sync)
+        layout IS the global layout, so only the step counter moves; the
+        strata flavors override this to re-pad factor rows to the device
+        multiple.  ``key``/``ef`` carry over unchanged — the refresh is
+        factor-phase only, so core-factor EF residuals stay meaningful.
+        """
+        return DistState(state.params, jnp.asarray(state.step, jnp.int32),
+                         dstate.key, dstate.ef)
+
+    def refresh_steps(self, plan, dstate: DistState, indices, values,
+                      num_steps: int) -> tuple[DistState, tuple]:
+        """K bounded factor-phase SGD steps over a recent-nonzero window.
+
+        The strategy-uniform face of ``core.fasttucker.refresh_steps``:
+        evaluate to the global layout, catch the factors up on the window
+        (core frozen — the step cost stays O(batch) and the dirty set
+        stays row-bounded), and lift the result back into this strategy's
+        at-rest layout.  Per-step keys fold the current step count into
+        ``dstate.key``, so successive refresh windows draw fresh samples
+        and a full-epoch retrain is never implied.
+
+        Returns ``(dstate', dirty)`` — ``dirty[n]`` the sorted int32 row
+        ids of mode ``n`` touched by the window, sized for
+        ``TuckerServer.update_rows(n, dirty[n], factors[n][dirty[n]])``.
+        """
+        from repro.core.fasttucker import refresh_steps as _core_refresh
+
+        params = self.eval_params(plan, dstate)
+        state = TrainState(params, jnp.asarray(dstate.step, jnp.int32))
+        key = jax.random.fold_in(dstate.key, int(dstate.step))
+        state, dirty = _core_refresh(state, key, indices, values,
+                                     plan.cfg, num_steps)
+        return self._lift_eval_params(plan, dstate, state), dirty
+
     # -- introspection (benchmarks / tests) ----------------------------------
 
     def lower_step(self, plan, dstate: DistState):

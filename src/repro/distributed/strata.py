@@ -435,6 +435,15 @@ class StrataStrategy(DistStrategy):
             dstate.params.core_factors,
         )
 
+    def _lift_eval_params(self, plan: StrataRunPlan, dstate: DistState,
+                          state: TrainState) -> DistState:
+        # re-pad the refreshed global-layout factors to the device-multiple
+        # row counts the strata shard_map steps expect at rest (the next
+        # step's in_specs re-place them on the mesh, as init does)
+        return DistState(
+            pad_factors_for_strata(state.params, plan.layout),
+            jnp.asarray(state.step, jnp.int32), dstate.key, dstate.ef)
+
     def lower_step(self, plan: StrataRunPlan, dstate: DistState):
         specialized = _build_strata_specializer(plan)
         s = int(plan.schedule[0])

@@ -49,7 +49,7 @@ unknown ``shard_mode`` raises instead of degrading.
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,22 @@ from .bucketing import (
 from .policy import ShardDecision, ShardPolicy, choose_shard_mode
 
 _LETTERS = "abcdefghijklmnop"
+
+
+class _TableSet(NamedTuple):
+    """One immutable generation of serving state, swapped atomically.
+
+    Every query entry point snapshots ``server._live`` ONCE on entry and
+    serves all of its bucketed chunks from that snapshot, so an
+    ``update_rows``/``refresh_tables`` swap landing mid-request can never
+    produce a torn read: in-flight work finishes entirely against the old
+    generation (whose buffers stay alive exactly as long as someone holds
+    the snapshot), and the next request sees the new one.
+    """
+
+    version: int       # monotone generation counter
+    tables: tuple      # placed C^(n), table_dtype storage
+    colsums: tuple     # f32 column sums of the TRUE rows, per mode
 
 
 # ---------------------------------------------------------------------------
@@ -251,7 +267,12 @@ class TuckerServer:
                 raise ValueError(f"mode {n}: A{params.factors[n].shape} "
                                  f"incompatible with "
                                  f"B{params.core_factors[n].shape}")
-        self.params = params
+        self._params = params
+        # writable host mirror of the factor matrices: ``update_rows``
+        # syncs dirty rows in place (O(dirty) per call) and ``params``
+        # re-materializes device arrays only when actually read
+        self._host_factors = [np.array(f) for f in params.factors]
+        self._params_stale = False
         self.dims = tuple(int(f.shape[0]) for f in params.factors)
         self.order = N
         self.core_rank = int(R)
@@ -266,7 +287,7 @@ class TuckerServer:
                                  accum_dtype=jnp.float32)
         # column sums over TRUE rows only — marginalization weights for
         # top_k; kept f32 (from the unrounded tables) even for bf16 storage
-        self._colsums = tuple(t.sum(axis=0) for t in tables32)
+        colsums = tuple(t.sum(axis=0) for t in tables32)
         tables = tuple(t.astype(dtype) for t in tables32)
 
         if donate == "auto":
@@ -301,7 +322,6 @@ class TuckerServer:
         # bound — belongs to one server, and every entry point's padded
         # index buffer is donated into its hot loop off-CPU.)
         if self.shard_mode == "none":
-            self._tables = tuple(tables)
             self._block_rows = None
             backend_name = self.backend
 
@@ -319,17 +339,10 @@ class TuckerServer:
                 _reconstruct_impl, static_argnames=("mode", "true_dims"),
                 donate_argnums=(1,) if donate else ())
         elif self.shard_mode == "row":
-            # pad rows to the data-axis multiple, then row-shard each table
-            # (strata layout); padding rows are zero ⟹ zero coefficients.
+            # rows pad to the data-axis multiple before sharding (strata
+            # layout); padding rows are zero ⟹ zero coefficients.
             M = int(mesh.shape["data"])
-            padded = tuple(
-                jnp.pad(t, ((0, -t.shape[0] % M), (0, 0))) for t in tables
-            )
-            self._tables = tuple(
-                jax.device_put(t, serve_row_sharding(mesh, t.shape))
-                for t in padded
-            )
-            self._block_rows = tuple(t.shape[0] // M for t in padded)
+            self._block_rows = tuple(-(-d // M) for d in self.dims)
             self._predict_fn = self._build_row_predict(donate)
             self._top_k_fn = self._build_row_top_k(donate)
             self._reconstruct_fn = self._build_row_reconstruct(donate)
@@ -338,14 +351,35 @@ class TuckerServer:
             # every bucket must split evenly over the data axis: round the
             # ladder up to multiples of M (stays sorted, stays bounded)
             self.ladder = tuple(sorted({-(-b // M) * M for b in self.ladder}))
-            self._tables = tuple(
-                jax.device_put(t, serve_table_replication(mesh))
-                for t in tables
-            )
             self._block_rows = None
             self._predict_fn = self._build_batch_predict(donate)
             self._top_k_fn = self._build_batch_top_k(donate)
             self._reconstruct_fn = self._build_batch_reconstruct(donate)
+
+        # delta-patch program: both row recomputes, the masked colsum
+        # delta, and ONE scatter fused into a single compile — so a patch
+        # costs exactly one table copy, however many rows are dirty.
+        # Inputs are padded to a power-of-two row count (compile cache
+        # grows log, not linearly, in distinct dirty sizes); pads repeat
+        # the last (id, row) pair, whose duplicate identical writes keep
+        # the scatter deterministic, and ``valid`` masks them out of the
+        # colsum delta.  NOT donated — the pre-patch buffer must stay
+        # alive for query snapshots taken before the swap (the
+        # double-buffering half of the design).
+        def _patch_impl(table, colsum, ids_, new_rows, old_rows, valid,
+                        core):
+            old32 = jnp.matmul(old_rows, core,
+                               preferred_element_type=jnp.float32)
+            new32 = jnp.matmul(new_rows, core,
+                               preferred_element_type=jnp.float32)
+            w = valid[:, None].astype(jnp.float32)
+            colsum = colsum + ((new32 - old32) * w).sum(axis=0)
+            return table.at[ids_].set(new32.astype(table.dtype)), colsum
+
+        self._patch_fn = jax.jit(_patch_impl)
+
+        # generation 0: queries snapshot self._live, swaps replace it whole
+        self._live = _TableSet(0, self._place_tables(tables), colsums)
 
     # -- construction helpers -------------------------------------------------
 
@@ -604,9 +638,10 @@ class TuckerServer:
             # match the nonempty path: predictions are f32 accum results
             # even when the tables are stored bf16
             return jnp.zeros((0,), jnp.float32)
+        live = self._live         # one snapshot: all chunks, one generation
         outs = []
         for padded, n in self._bucketed_chunks(indices):
-            pred = self._predict_fn(self._tables, self._eyes, padded)
+            pred = self._predict_fn(live.tables, self._eyes, padded)
             outs.append(pred if n == padded.shape[0] else pred[:n])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
@@ -622,8 +657,9 @@ class TuckerServer:
         if len(ids) == 0:
             other = tuple(d for n, d in enumerate(self.dims) if n != mode)
             return jnp.zeros((0,) + other, jnp.float32)
+        live = self._live         # one snapshot: all chunks, one generation
         outs = [
-            self._reconstruct_fn(self._tables, chunk, mode=mode,
+            self._reconstruct_fn(live.tables, chunk, mode=mode,
                                  true_dims=self.dims)[:n]
             for chunk, n in self._bucketed_chunks(ids)
         ]
@@ -648,9 +684,10 @@ class TuckerServer:
         if len(ids) == 0:
             return (jnp.zeros((0, k), jnp.float32),
                     jnp.zeros((0, k), jnp.int32))
+        live = self._live         # one snapshot: all chunks, one generation
         scores, items = [], []
         for chunk, n in self._bucketed_chunks(ids):
-            s, i = self._top_k_fn(self._tables, self._colsums, chunk,
+            s, i = self._top_k_fn(live.tables, live.colsums, chunk,
                                   mode=mode, target=target, k=k,
                                   true_target_dim=self.dims[target])
             scores.append(s[:n])
@@ -658,6 +695,129 @@ class TuckerServer:
         if len(scores) == 1:
             return scores[0], items[0]
         return jnp.concatenate(scores), jnp.concatenate(items)
+
+    # -- online refresh (delta patch + versioned swap) ------------------------
+
+    @property
+    def params(self) -> FastTuckerParams:
+        """The model currently served (factors kept current by
+        ``update_rows``).  Factor arrays re-materialize from the host
+        mirror only after updates — reading this between every delta
+        would re-pay the host→device transfer the mirror exists to
+        avoid, so the loop-facing paths never touch it."""
+        if self._params_stale:
+            self._params = FastTuckerParams(
+                tuple(jnp.asarray(f) for f in self._host_factors),
+                self._params.core_factors)
+            self._params_stale = False
+        return self._params
+
+    @property
+    def table_version(self) -> int:
+        """Monotone table-generation counter, bumped by every swap."""
+        return self._live.version
+
+    @property
+    def _tables(self) -> tuple:
+        """Live C^(n) tables (current generation's placed storage)."""
+        return self._live.tables
+
+    @property
+    def _colsums(self) -> tuple:
+        """Live f32 per-mode column sums (current generation)."""
+        return self._live.colsums
+
+    def update_rows(self, mode: int, ids, factor_rows) -> int:
+        """Patch the serving tables for changed factor rows of one mode.
+
+        Recomputes ONLY the dirty rows of C^(mode) = A^(mode) B^(mode)
+        through ``mode_products`` (f32 accumulation, rounded once to
+        ``table_dtype`` — so the patched table is bitwise what a full
+        server rebuild from the updated params would store), updates the
+        f32 column sums incrementally (subtract the old rows' sums, add
+        the new), and publishes the result as a new table generation with
+        one atomic ``_live`` swap.  In-flight queries that snapshotted the
+        previous generation finish against it untouched — the patch never
+        writes into a live buffer (no donation into the scatter).
+
+        Parameters: ``ids`` are unique row ids of ``mode`` (duplicates
+        raise — last-writer-wins scatter order would be undefined), and
+        ``factor_rows`` is the matching ``(len(ids), J_mode)`` block of
+        the updated A^(mode).  ``self.params`` is kept in sync so repeated
+        deltas and ``refresh_tables()`` agree on the current model.
+
+        Returns the new ``table_version`` (unchanged if ``ids`` is empty).
+        """
+        mode = self._check_mode(mode)
+        ids = self._check_ids(ids, mode)
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError(f"update_rows ids must be unique, got "
+                             f"{len(ids) - len(np.unique(ids))} duplicates")
+        mirror = self._host_factors[mode]
+        J = int(mirror.shape[1])
+        rows = np.asarray(np.asarray(factor_rows), mirror.dtype)
+        if rows.shape != (len(ids), J):
+            raise ValueError(f"factor_rows must be {(len(ids), J)}, "
+                             f"got {tuple(rows.shape)}")
+        if len(ids) == 0:
+            return self.table_version
+        live = self._live
+        # pad to the next power of two: the fused patch program compiles
+        # once per (mode, size class) — log-many entries, like the query
+        # ladder.  Pads repeat the last entry; ``valid`` masks them out
+        # of the colsum delta.
+        f = len(ids)
+        P = 1 << (max(f, 8) - 1).bit_length()
+        sel = np.minimum(np.arange(P), f - 1)
+        valid = np.arange(P) < f
+        # same contraction per row as the full rebuild — a row subset of
+        # A·B is row-wise the identical dot reduction, so the patched
+        # rows (f32 accum, rounded once to table_dtype inside the fused
+        # program) reproduce the rebuilt rows bitwise
+        table, colsum = self._patch_fn(
+            live.tables[mode], live.colsums[mode], ids[sel], rows[sel],
+            mirror[ids[sel]], valid, self._params.core_factors[mode])
+        # re-pin only when the patch came back on a different placement
+        # (sharded modes, where GSPMD may choose its own): an
+        # unconditional device_put would hand the next patch a table
+        # whose layout never reaches a fixed point, recompiling the
+        # fused program every generation
+        if not table.sharding.is_equivalent_to(live.tables[mode].sharding,
+                                               table.ndim):
+            table = jax.device_put(table, live.tables[mode].sharding)
+
+        # keep the model current: O(dirty) in-place mirror write; the
+        # device-side ``params`` view re-materializes lazily on read
+        mirror[ids] = rows
+        self._params_stale = True
+
+        tables = list(live.tables)
+        tables[mode] = table
+        colsums = list(live.colsums)
+        colsums[mode] = colsum
+        self._live = _TableSet(live.version + 1, tuple(tables),
+                               tuple(colsums))
+        return self._live.version
+
+    def refresh_tables(self) -> int:
+        """Full-table rebuild from the current ``self.params`` + swap.
+
+        The non-incremental alternative to ``update_rows`` — recompute
+        every C^(n) and its f32 column sums from scratch, place them in
+        this server's layout, and publish one new generation.  This is
+        the baseline ``bench_refresh.py`` measures the delta patch
+        against, and the recovery path when colsum drift from many
+        incremental updates should be flushed.  Returns the new version.
+        """
+        tables32 = mode_products(self.params.factors,
+                                 self.params.core_factors,
+                                 accum_dtype=jnp.float32)
+        colsums = tuple(t.sum(axis=0) for t in tables32)
+        tables = tuple(t.astype(self.table_dtype) for t in tables32)
+        live = self._live
+        self._live = _TableSet(live.version + 1,
+                               self._place_tables(tables), colsums)
+        return self._live.version
 
     # -- introspection --------------------------------------------------------
 
@@ -686,6 +846,24 @@ class TuckerServer:
             raise ValueError(
                 f"ids out of range for mode {mode} (I={self.dims[mode]})")
         return ids
+
+    def _place_tables(self, tables) -> tuple:
+        """Place freshly computed C^(n) tables in this server's layout —
+        pad + row-shard, replicate, or leave resident.  Construction and
+        ``refresh_tables`` share this one placement policy, so every
+        generation of ``_live.tables`` has identical layout."""
+        if self.shard_mode == "row":
+            M = int(self.mesh.shape["data"])
+            padded = tuple(
+                jnp.pad(t, ((0, -t.shape[0] % M), (0, 0))) for t in tables)
+            return tuple(
+                jax.device_put(t, serve_row_sharding(self.mesh, t.shape))
+                for t in padded)
+        if self.shard_mode == "batch":
+            return tuple(
+                jax.device_put(t, serve_table_replication(self.mesh))
+                for t in tables)
+        return tuple(tables)
 
     def _bucketed_chunks(self, arr: np.ndarray):
         """Yield (zero-padded chunk, true length) over the bucket ladder —

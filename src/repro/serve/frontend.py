@@ -74,6 +74,9 @@ class FrontendStats:
     shed_queue_full: int = 0     # rejected at submit (bounded queue)
     shed_deadline: int = 0       # dropped at flush (deadline passed)
     flushes: int = 0             # engine calls issued
+    table_version: int = 0       # server table version the last flush ran on
+    stale_flushes: int = 0       # flushes answered by a version that a
+                                 # table swap superseded while in flight
     latency_ms: list = dataclasses.field(default_factory=list)
     by_bucket: dict = dataclasses.field(default_factory=dict)
 
@@ -185,6 +188,15 @@ class ServeFrontend:
         n = indices.shape[0]
         if n == 0:
             raise ValueError("empty request")
+        if n > self.admission.max_queue:
+            # not an overload condition: this request can NEVER be admitted
+            # (it exceeds the whole queue bound even when empty).  A shed
+            # would send closed-loop clients into an infinite retry loop —
+            # it's a caller error, so say so.
+            raise ValueError(
+                f"request of {n} queries exceeds max_queue="
+                f"{self.admission.max_queue} and can never be admitted; "
+                f"split it or raise AdmissionConfig.max_queue")
         if self._queued_queries + n > self.admission.max_queue:
             self.stats.shed_queue_full += 1
             raise RequestShed(
@@ -245,6 +257,7 @@ class ServeFrontend:
             return
         indices = np.concatenate([p.indices for p in live])
         loop = asyncio.get_running_loop()
+        version = getattr(self.server, "table_version", 0)
         try:
             results = await loop.run_in_executor(
                 self._executor, self._serve_batch, indices)
@@ -253,8 +266,13 @@ class ServeFrontend:
                 p.future.set_exception(e)
             return
         self.stats.flushes += 1
+        self.stats.table_version = version
+        if getattr(self.server, "table_version", 0) != version:
+            # an online table swap landed while this flush was in flight:
+            # its answers are consistent (one version end to end) but stale
+            self.stats.stale_flushes += 1
         done = self._clock()
-        bucket = bucket_for(len(indices), self.server.ladder)
+        ladder = self.server.ladder
         off = 0
         for p in live:
             n = p.indices.shape[0]
@@ -265,7 +283,12 @@ class ServeFrontend:
             off += n
             self.stats.served += 1
             self.stats.served_queries += n
-            self.stats.record(bucket, (done - p.enqueued) * 1e3)
+            # per-bucket latency keyed by the REQUEST's own size bucket,
+            # not the coalesced batch's — p50/p99 per request class is
+            # what the closed-loop report labels them as
+            self.stats.record(
+                bucket_for(min(n, ladder[-1]), ladder),
+                (done - p.enqueued) * 1e3)
 
     def _serve_batch(self, indices: np.ndarray):
         import jax

@@ -143,6 +143,44 @@ def test_deadline_shed_at_flush(server):
     assert stats.served == 1 and out.shape == (3,)
 
 
+def test_oversized_request_raises(server):
+    """A request larger than max_queue can NEVER be admitted — that's a
+    caller error (ValueError), not an overload shed: a RequestShed would
+    send closed-loop clients into an infinite retry loop."""
+    async def main():
+        async with ServeFrontend(
+                server, AdmissionConfig(max_queue=8)) as fe:
+            with pytest.raises(ValueError, match="max_queue"):
+                await fe.submit(np.zeros((9, 3), np.int32))
+            return fe.stats
+
+    stats = asyncio.run(main())
+    assert stats.shed_queue_full == 0       # not counted as overload
+    assert stats.admitted == 0
+
+
+def test_flush_attributes_latency_per_request_bucket(server):
+    """Coalesced requests record latency under their OWN size bucket,
+    not the combined batch's — per-class p50/p99 must describe the
+    requests labelled with them."""
+    from repro.serve import bucket_for
+
+    reqs = [np.zeros((1, 3), np.int32), np.zeros((12, 3), np.int32)]
+
+    async def main():
+        async with ServeFrontend(server,
+                                 AdmissionConfig(microbatch=13)) as fe:
+            await asyncio.gather(*(fe.submit(r) for r in reqs))
+            return fe.stats
+
+    stats = asyncio.run(main())
+    assert stats.flushes == 1               # the two coalesced
+    want = {bucket_for(1, server.ladder): 1,
+            bucket_for(12, server.ladder): 1}
+    got = {b: len(v) for b, v in stats.by_bucket.items()}
+    assert got == want
+
+
 def test_stats_percentiles_and_buckets():
     st = FrontendStats()
     assert st.percentiles()["p50"] is None
@@ -184,9 +222,12 @@ def test_closed_loop_top_k(server):
 def test_closed_loop_sheds_under_overload(server):
     """A queue bound far below the offered load must shed rather than
     grow — the admission contract under overload."""
+    # max_request stays within max_queue: larger singles are no longer
+    # shed-and-retried but rejected outright with ValueError (see
+    # test_oversized_request_raises)
     rep = run_closed_loop(
         server, qps=50_000.0, duration_s=0.5, concurrency=16,
-        max_request=64,
+        max_request=32,
         admission=AdmissionConfig(max_queue=32, microbatch=32,
                                   deadline_ms=5.0),
         seed=3)
