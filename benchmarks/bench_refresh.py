@@ -20,6 +20,13 @@ regime in the document.
 
     PYTHONPATH=src python -m benchmarks.bench_refresh \
         [--smoke] [--out BENCH_refresh.json] [--table-dtype bfloat16]
+
+``--supervised`` adds an OPTIONAL ``supervised`` section (older
+documents without it stay valid): end-to-end submit→publish round
+latency through ``repro.serve.supervisor.RefreshSupervisor``, plus the
+cost of riding out an injected refresh fault — how much slower the
+degraded→recovered round is than a clean one (retry backoff + breaker
+cadence, bounded by the supervisor config, never an outage).
 """
 from __future__ import annotations
 
@@ -62,6 +69,19 @@ def validate(doc: dict) -> None:
                 f"rows[{i}]: delta patch must beat rebuild at dirty "
                 f"fraction {r['dirty_fraction']} (speedup "
                 f"{r['speedup']:.2f} <= 1)")
+    sup = doc.get("supervised")
+    if sup is not None:   # optional section — absent in older documents
+        for field in ("rounds", "clean_round_ms", "faulted_round_ms",
+                      "faults_injected", "breaker_trips", "recoveries"):
+            if not isinstance(sup.get(field), (int, float)):
+                raise ValueError(f"supervised.{field} must be numeric")
+        if sup["rounds"] <= 0 or sup["clean_round_ms"] <= 0:
+            raise ValueError("supervised: rounds and latency must be > 0")
+        if sup["faults_injected"] > 0 and sup["recoveries"] < 1:
+            raise ValueError(
+                "supervised: injected faults must end in a recovery — a "
+                "benchmark that leaves the supervisor degraded measured "
+                "an outage, not an overhead")
 
 
 def _median_ms(fn, iters: int) -> float:
@@ -142,16 +162,99 @@ def measure(smoke: bool, table_dtype: str | None = None) -> dict:
     }
 
 
+SUP_FULL = dict(dims=(200, 160, 120), nnz=20_000, warmup=30, rounds=5)
+SUP_SMOKE = dict(dims=(24, 18, 12), nnz=800, warmup=6, rounds=3)
+
+
+def measure_supervised(smoke: bool) -> dict:
+    """Supervised round latency + the cost of riding out a refresh fault."""
+    import jax
+
+    from repro.core import FastTuckerConfig, init_state
+    from repro.core.sptensor import SparseTensor
+    from repro.data.synthetic import planted_tensor
+    from repro.distributed import get_strategy
+    from repro.runtime.fault import FaultPlan
+    from repro.serve import RefreshSupervisor, SupervisorConfig, TuckerServer
+
+    point = SUP_SMOKE if smoke else SUP_FULL
+    dims, nnz = point["dims"], point["nnz"]
+    t = planted_tensor(dims, nnz, rank=4, core_rank=4, noise=0.05, seed=0)
+    idx, val = np.asarray(t.indices), np.asarray(t.values)
+    n_stream = nnz // 4
+    n_warm = nnz - n_stream
+    strategy = get_strategy("local")
+    cfg = FastTuckerConfig(dims=dims, ranks=(4,) * 3, core_rank=4,
+                           batch_size=256)
+    plan = strategy.prepare(SparseTensor(idx[:n_warm], val[:n_warm], dims),
+                            cfg, None, seed=0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    dstate = strategy.init(plan, init_state(k1, cfg), k2)
+    step = strategy.make_step(plan)
+    for _ in range(point["warmup"]):
+        dstate = step(dstate)
+    params = strategy.eval_params(plan, dstate)
+    per = n_stream // (point["rounds"] + 1)
+    sup_cfg = SupervisorConfig(refresh_steps=2, window=per,
+                               backoff_base_s=0.002, backoff_cap_s=0.02,
+                               degraded_retry_s=0.01)
+
+    def rounds_through(fault_plan):
+        sup = RefreshSupervisor(
+            TuckerServer(params), strategy, plan, dstate,
+            config=sup_cfg, fault_plan=fault_plan,
+            history=(idx[:n_warm], val[:n_warm]))
+        times = []
+        for rd in range(point["rounds"]):
+            lo = n_warm + rd * per
+            t0 = time.perf_counter()
+            sup.run_round(idx[lo:lo + per], val[lo:lo + per])
+            times.append((time.perf_counter() - t0) * 1e3)
+        return times, sup.health()
+
+    clean_times, clean_h = rounds_through(None)
+    # round 0 pays the refresh compile: the clean figure is the later rounds
+    clean_ms = float(np.median(clean_times[1:]) if len(clean_times) > 1
+                     else clean_times[0])
+    # blow the whole retry budget once (3 hits vs max_attempts=3), so the
+    # faulted round's latency includes a breaker trip + degraded cadence
+    fault_times, fault_h = rounds_through(
+        FaultPlan.parse("refresh@0:1:2", seed=0))
+    faulted_ms = float(max(fault_times))
+    sec = {
+        "rounds": int(point["rounds"]),
+        "window": int(per),
+        "clean_round_ms": round(clean_ms, 4),
+        "faulted_round_ms": round(faulted_ms, 4),
+        "fault_overhead_ms": round(faulted_ms - clean_ms, 4),
+        "publish_kinds": {"clean": clean_h["last_publish"]["kind"],
+                          "faulted": fault_h["last_publish"]["kind"]},
+        "faults_injected": int(fault_h["faults_injected"]),
+        "retries": int(fault_h["retries"]),
+        "breaker_trips": int(fault_h["breaker_trips"]),
+        "recoveries": int(fault_h["recoveries"]),
+    }
+    row("refresh/supervised_round", clean_ms * 1e3,
+        f"faulted={faulted_ms:.2f}ms,trips={sec['breaker_trips']},"
+        f"recoveries={sec['recoveries']}")
+    return sec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (CI schema + contract check)")
     ap.add_argument("--table-dtype", default=None,
                     choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--supervised", action="store_true",
+                    help="add the optional supervised-round section "
+                         "(round latency + injected-fault overhead)")
     ap.add_argument("--out", default="",
                     help="write the BENCH_refresh JSON document here")
     args = ap.parse_args()
     doc = measure(args.smoke, args.table_dtype)
+    if args.supervised:
+        doc["supervised"] = measure_supervised(args.smoke)
     validate(doc)
     if args.out:
         with open(args.out, "w") as f:

@@ -2,10 +2,19 @@
 
 Layout (orbax-free, npz-per-leaf):
 
-    <dir>/step_000123.tmp/        # written first
-        manifest.json             # tree structure + shapes + dtypes
+    <dir>/step_000123.tmp/        # leaves + staged manifest, written first
         leaf_000000.npy ...
-    <dir>/step_000123/            # atomic rename = commit
+        manifest.json.staged
+    <dir>/step_000123/            # os.replace'd into place
+        manifest.json             # commit marker, os.replace'd LAST
+
+A step is committed if and only if ``manifest.json`` exists in its final
+directory — the marker lands in one atomic ``os.replace`` after every
+leaf is durably in place, so a kill at ANY point mid-save leaves
+``latest_step()`` on the previous commit (markerless debris is swept by
+the next save's gc).  Re-saving an existing step decommits it first
+(marker unlink, also atomic) — a kill inside that window falls back to
+the commit before it, never to a half-written tree.
 
 Restore tolerates a DIFFERENT device topology than the writer (elastic
 resume): arrays are loaded on host and re-placed with whatever shardings
@@ -77,16 +86,31 @@ class CheckpointManager:
         }
         for i, x in enumerate(leaves):
             np.save(tmp / f"leaf_{i:06d}.npy", x)
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # the manifest is the commit marker: stage it under a non-marker
+        # name so the step cannot look committed until the very last rename
+        (tmp / "manifest.json.staged").write_text(json.dumps(manifest))
         if final.exists():
+            # decommit (atomic marker unlink) BEFORE clearing: a kill
+            # mid-rmtree leaves an uncommitted dir, never a corrupt commit
+            (final / "manifest.json").unlink(missing_ok=True)
             shutil.rmtree(final)
-        tmp.rename(final)          # atomic commit
+        os.replace(tmp, final)
+        # atomic commit: the marker appears only with every leaf in place
+        os.replace(final / "manifest.json.staged", final / "manifest.json")
         self._gc()
 
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+        # crash debris: staging dirs and markerless (uncommitted) steps.
+        # No writer is concurrent here — save() serializes on wait() and
+        # _gc runs on the writing thread — so anything markerless is dead.
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and (
+                    p.name.endswith(".tmp")
+                    or not (p / "manifest.json").exists()):
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- read ----------------------------------------------------------------
 
@@ -94,7 +118,8 @@ class CheckpointManager:
         out = []
         for p in self.dir.iterdir():
             if p.is_dir() and p.name.startswith("step_") \
-                    and not p.name.endswith(".tmp"):
+                    and not p.name.endswith(".tmp") \
+                    and (p / "manifest.json").exists():
                 out.append(int(p.name[5:]))
         return sorted(out)
 

@@ -31,6 +31,7 @@ import json
 import os
 import queue
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -466,14 +467,31 @@ class StratumPrefetcher:
 
     ``take(pos)`` enforces in-order consumption; a restore/resume that
     jumps the step counter just re-seeds the walk (``reset``).
+
+    A transient load/place failure (a flaky memmap page-in, a
+    ``jax.device_put`` hiccup) retries in place up to ``retries`` times
+    with the shared ``runtime.fault.backoff`` schedule before becoming
+    fatal — the attempt counter resets on every success, so only
+    ``retries``+1 *consecutive* failures at one position kill the walk.
+    ``retries=0`` restores the old first-exception-is-sticky behavior.
+    ``fault_plan`` (a ``runtime.fault.FaultPlan``) injects failures at
+    site ``"transfer"``, before the device placement, for testing.
     """
 
     def __init__(self, load_fn, next_pos, *, depth: int = 2,
-                 place_fn=None, start: int = 0):
+                 place_fn=None, start: int = 0, retries: int = 2,
+                 retry_base_s: float = 0.01, retry_cap_s: float = 0.25,
+                 seed: int = 0, fault_plan=None):
         self._load = load_fn
         self._next = next_pos
         self.depth = max(0, int(depth))
         self._place = place_fn if place_fn is not None else jax.device_put
+        self.retries = max(0, int(retries))
+        self._retry_base_s = float(retry_base_s)
+        self._retry_cap_s = float(retry_cap_s)
+        self._seed = int(seed)
+        self._fault_plan = fault_plan
+        self.retried = 0  # total transient failures absorbed by retries
         self._thread: threading.Thread | None = None
         self._stop: threading.Event | None = None
         self._queue: queue.Queue | None = None
@@ -482,10 +500,39 @@ class StratumPrefetcher:
         if self.depth:
             self._spawn(start)
 
+    def _load_place(self, pos: int, stop: threading.Event | None = None):
+        """Load + place position ``pos``, retrying transient failures.
+
+        Shared by the background worker (``stop``-aware backoff sleeps)
+        and the synchronous ``depth=0`` path.  Raises the last failure
+        once the retry budget is spent or the walk is being shut down.
+        """
+        from repro.runtime.fault import backoff
+
+        attempt = 0
+        while True:
+            try:
+                block = self._load(pos)
+                if self._fault_plan is not None:
+                    self._fault_plan.check("transfer")
+                return self._place(block)
+            except BaseException as e:  # noqa: BLE001 — bounded re-raise
+                if attempt >= self.retries:
+                    raise
+                attempt += 1
+                self.retried += 1
+                delay = backoff(attempt - 1, base=self._retry_base_s,
+                                cap=self._retry_cap_s, seed=self._seed)
+                if stop is not None:
+                    if stop.wait(delay):
+                        raise e from None
+                else:
+                    time.sleep(delay)
+
     def _spawn(self, start: int) -> None:
         stop = threading.Event()
         q: queue.Queue = queue.Queue(maxsize=self.depth)
-        load, place, nxt = self._load, self._place, self._next
+        nxt = self._next
 
         def put(item) -> bool:
             while not stop.is_set():
@@ -499,11 +546,12 @@ class StratumPrefetcher:
         def worker(pos: int) -> None:
             # A load/place failure (e.g. a failed memmap page-in) must not
             # just kill this thread — that would leave take() blocked on an
-            # empty queue forever.  Park the exception in the queue so the
-            # consumer re-raises it at the position that failed.
+            # empty queue forever.  _load_place retries transients in
+            # place; a budget-exhausted exception is parked in the queue so
+            # the consumer re-raises it at the position that failed.
             try:
                 while not stop.is_set():
-                    blocks = place(load(pos))
+                    blocks = self._load_place(pos, stop)
                     if not put((pos, blocks)):
                         return
                     pos = nxt(pos)
@@ -524,7 +572,7 @@ class StratumPrefetcher:
         take() after that (the walk is dead until ``reset``).
         """
         if self.depth == 0:
-            return self._place(self._load(pos))
+            return self._load_place(pos)
         if self._failure is not None:
             raise self._failure
         if pos != self._head:

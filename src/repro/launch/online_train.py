@@ -1,27 +1,31 @@
-"""Online training driver: ingest → bounded refresh → delta serve patch.
+"""Online training driver: supervised ingest → refresh → patch rounds.
 
-The streaming loop production recommenders run, built from three pieces
-this repo already has and PR-level glue:
+The streaming loop production recommenders run.  Since PR 9 the round
+itself lives in ``repro.serve.supervisor.RefreshSupervisor`` — a
+background thread inside the serving process running
 
-    1. **Ingest** — each round's new nonzeros are appended into the
-       chunk-sharded ``NonzeroStore`` (``store.append``: the chunked
-       writer's bucket-offset scatter, resumed at the existing fill
-       levels), so the strata sampling layout stays current without a
-       rebuild.
+    1. **Ingest** — arrivals fold into the chunk-sharded ``NonzeroStore``
+       (``store.append``) and the recent-nonzero window advances;
     2. **Refresh** — ``strategy.refresh_steps`` runs K factor-phase SGD
-       steps over a sliding window of recent nonzeros (core ``B^(n)``
-       frozen: the paper's one-step sampling touches only gathered rows,
-       so the catch-up cost is O(K·|Ψ|), never an epoch) and reports the
-       per-mode dirty-row union.
-    3. **Patch** — ``TuckerServer.update_rows`` recomputes ONLY the dirty
-       rows of C^(n) = A^(n)B^(n) and publishes them behind a versioned
-       atomic swap; queries keep flowing against the old generation until
-       the swap lands.  No checkpoint is written anywhere in the loop —
-       this is the train→serve gap closed without a checkpoint boundary.
+       steps over the window and reports the per-mode dirty-row union;
+    3. **Patch** — ``TuckerServer.update_rows`` republishes only the
+       dirty C^(n) rows behind the versioned atomic swap (or, when the
+       drift tracker says so, one full ``refresh_tables()`` rebuild)
 
+with retry/backoff per stage, a breaker into degraded serving when a
+stage stays broken, and clean recovery after.  This driver is the
+harness: it submits each round's arrivals, drains, probes the LIVE
+server, and logs ``health()``.
+
+``--inject-faults`` threads a deterministic ``FaultPlan`` through the
+supervisor (grammar ``site@i:j:k`` / ``site%p`` over sites ingest,
+transfer, refresh, publish — e.g. ``"refresh@0:1:2"`` fails the first
+three refresh attempts then clears).  ``--expect-breaker`` asserts the
+run degraded AND recovered — the CI fault-injection smoke contract.
 ``--verify`` cross-checks the final patched server against a fresh
 ``TuckerServer`` rebuilt from the refreshed params — bitwise for f32
-tables — which is what the CI online-refresh smoke step asserts.
+tables, even after faulted rounds (stage-resume runs each refresh
+exactly once).
 
 Example (CI smoke shape):
 
@@ -47,20 +51,10 @@ from repro.data.pipeline import NonzeroStore
 from repro.data.synthetic import planted_tensor
 from repro.distributed import get_strategy
 from repro.launch.mesh import make_host_mesh
-from repro.serve import TuckerServer
+from repro.runtime.fault import FaultPlan
+from repro.serve import RefreshSupervisor, SupervisorConfig, TuckerServer
 
 log = logging.getLogger("repro.online")
-
-
-def _window(idx: np.ndarray, val: np.ndarray, size: int
-            ) -> tuple[np.ndarray, np.ndarray]:
-    """Fixed-size recent-nonzero window (tiled up when short) — one array
-    shape across rounds, so the refresh step compiles exactly once."""
-    if len(val) >= size:
-        return idx[-size:], val[-size:]
-    reps = -(-size // max(len(val), 1))
-    return (np.tile(idx, (reps, 1))[-size:],
-            np.tile(val, reps)[-size:])
 
 
 def main() -> None:
@@ -98,6 +92,15 @@ def main() -> None:
     ap.add_argument("--verify", action="store_true",
                     help="assert the final patched tables match a full "
                          "server rebuild (bitwise for f32 tables)")
+    ap.add_argument("--inject-faults", default="",
+                    help="deterministic FaultPlan spec, e.g. "
+                         "'refresh@0:1:2,publish%%0.1' (sites: ingest, "
+                         "transfer, refresh, publish)")
+    ap.add_argument("--expect-breaker", action="store_true",
+                    help="assert the supervisor tripped into degraded "
+                         "mode AND recovered (CI fault-smoke contract)")
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="per-cycle retry budget before the breaker trips")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -164,36 +167,67 @@ def main() -> None:
     log.info("serving %s tables (%s, version %d)", server.shard_mode,
              server.table_dtype, server.table_version)
 
-    seen_idx = [all_idx[:n_warm]]
-    seen_val = [all_val[:n_warm]]
-    for rd in range(args.rounds):
-        lo = rd * per_round
-        hi = n_stream if rd == args.rounds - 1 else (rd + 1) * per_round
-        new_idx, new_val = stream_idx[lo:hi], stream_val[lo:hi]
-        if len(new_val) == 0:
-            break
-        t0 = time.time()
-        store = store.append(new_idx, new_val)
-        seen_idx.append(new_idx)
-        seen_val.append(new_val)
-        win_idx, win_val = _window(np.concatenate(seen_idx),
-                                   np.concatenate(seen_val), window)
-        dstate, dirty = strategy.refresh_steps(
-            plan, dstate, win_idx, win_val, args.refresh_steps)
-        params = strategy.eval_params(plan, dstate)
-        for n, ids in enumerate(dirty):
-            if len(ids):
-                server.update_rows(n, ids, params.factors[n][ids])
-        # probe the LIVE server with queries drawn from the new arrivals
-        probe = new_idx[: min(64, len(new_idx))]
-        pred = np.asarray(server.predict(probe))
-        r, m = rmse_mae(params, test_t, ft.predict)
-        log.info(
-            "round %d: +%d nnz (store %d), refresh K=%d dirty %s, "
-            "table v%d, probe |x̂| %.3f, rmse %.4f mae %.4f (%.0f ms)",
-            rd, len(new_val), store.meta["nnz"], args.refresh_steps,
-            [len(d) for d in dirty], server.table_version,
-            float(np.abs(pred).mean()), r, m, (time.time() - t0) * 1e3)
+    fault_plan = (FaultPlan.parse(args.inject_faults, seed=args.seed)
+                  if args.inject_faults else None)
+    sup = RefreshSupervisor(
+        server, strategy, plan, dstate, store=store,
+        config=SupervisorConfig(
+            refresh_steps=args.refresh_steps, window=window,
+            max_attempts=args.max_attempts, backoff_base_s=0.005,
+            backoff_cap_s=0.05, degraded_retry_s=0.02, seed=args.seed),
+        fault_plan=fault_plan,
+        history=(all_idx[:n_warm], all_val[:n_warm]))
+    sup.start()
+    try:
+        for rd in range(args.rounds):
+            lo = rd * per_round
+            hi = n_stream if rd == args.rounds - 1 else (rd + 1) * per_round
+            new_idx, new_val = stream_idx[lo:hi], stream_val[lo:hi]
+            if len(new_val) == 0:
+                break
+            t0 = time.time()
+            sup.submit(new_idx, new_val)
+            if not sup.drain(timeout=600):
+                raise RuntimeError(
+                    f"round {rd} did not publish within 600s: "
+                    f"{sup.health()}")
+            # probe the LIVE server with queries drawn from the arrivals
+            probe = new_idx[: min(64, len(new_idx))]
+            pred = np.asarray(server.predict(probe))
+            params = strategy.eval_params(plan, sup.dstate)
+            r, m = rmse_mae(params, test_t, ft.predict)
+            h = sup.health()
+            log.info(
+                "round %d: +%d nnz (store %d), refresh K=%d dirty %s, "
+                "table v%d %s, state %s (trips %d, recoveries %d, "
+                "faults %d), probe |x̂| %.3f, rmse %.4f mae %.4f (%.0f ms)",
+                rd, len(new_val), sup.store.meta["nnz"],
+                args.refresh_steps, h["last_dirty"], h["generation"],
+                h["last_publish"]["kind"], h["state"], h["breaker_trips"],
+                h["recoveries"], h["faults_injected"],
+                float(np.abs(pred).mean()), r, m, (time.time() - t0) * 1e3)
+    finally:
+        sup.stop()
+
+    health = sup.health()
+    params = strategy.eval_params(plan, sup.dstate)
+    if args.inject_faults:
+        assert health["faults_injected"] > 0, (
+            "--inject-faults given but no fault fired — check the spec "
+            f"against the round count: {args.inject_faults!r}")
+        log.info("fault injection: %d faults fired (%s), %d retries, "
+                 "%d breaker trips, %d recoveries",
+                 health["faults_injected"], fault_plan.fired_by_site(),
+                 health["retries"], health["breaker_trips"],
+                 health["recoveries"])
+    if args.expect_breaker:
+        assert health["breaker_trips"] >= 1, (
+            f"expected a breaker trip, got none: {health}")
+        assert health["recoveries"] >= 1, (
+            f"expected a recovery after degradation: {health}")
+        log.info("degraded-then-recovered contract OK "
+                 "(%d trips, %d recoveries)",
+                 health["breaker_trips"], health["recoveries"])
 
     if args.verify:
         ref = TuckerServer(

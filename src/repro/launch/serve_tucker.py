@@ -112,6 +112,10 @@ def main() -> None:
     ap.add_argument("--admission-max-wait-ms", type=float, default=2.0,
                     help="flush timer: max time a lone request waits "
                          "for a microbatch to fill")
+    ap.add_argument("--admission-slo-ms", type=float, default=None,
+                    help="latency SLO budget per request (alarm counter "
+                         "slo_violations in the closed-loop report; "
+                         "answers still flow past the budget)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
@@ -153,6 +157,7 @@ def main() -> None:
             deadline_ms=args.admission_deadline_ms,
             microbatch=args.microbatch,
             max_wait_ms=args.admission_max_wait_ms,
+            slo_ms=args.admission_slo_ms,
         )
         report = run_closed_loop(
             server, qps=args.qps, duration_s=args.duration,
@@ -174,6 +179,9 @@ def main() -> None:
             log.info("  bucket %s: p50 %.2fms p95 %.2fms p99 %.2fms "
                      "(%d requests)", bucket, row["p50"], row["p95"],
                      row["p99"], row["count"])
+        if report.get("slo_violations"):
+            log.info("  SLO violations (budget %s ms): %s",
+                     report["slo_budget_ms"], report["slo_violations"])
         print(json.dumps(report, indent=1))
         return
 

@@ -1,13 +1,22 @@
-"""Fault tolerance + straggler mitigation for the training loop.
+"""Fault tolerance: injection plans, retry backoff, the training supervisor.
 
-``Supervisor`` wraps the step loop:
-  * checkpoint/restart — periodic async checkpoints; on a (simulated or
-    real) failure the loop restores the latest commit and replays;
-  * straggler watchdog — EWMA of step wall time; a step slower than
-    ``straggler_factor``× the EWMA is logged and counted (on real fleets
-    the hook triggers requeue/hot-spare swap; here it feeds metrics);
-  * retry budget — repeated failures within a window abort with a clear
-    error instead of looping forever.
+Three layers share this module:
+
+  * ``FaultPlan`` — deterministic, seedable fault injection at named
+    *sites* (``ingest`` / ``transfer`` / ``refresh`` / ``publish`` in the
+    online-serving loop; any string works).  Each call to
+    ``check(site)`` advances that site's counter and raises
+    ``FaultInjected`` when the spec says so — either at targeted check
+    indices (``hits``) or with a seeded per-site probability (``prob``).
+    The same plan drives tests, the ``--inject-faults`` CLI flag, the
+    ``RefreshSupervisor`` and the ``StratumPrefetcher``, so every
+    failure-handling path is exercised by one mechanism.
+  * ``backoff(attempt, ...)`` — the shared deterministic
+    exponential-backoff-with-jitter schedule every retry loop uses.
+  * ``Supervisor`` — the training-loop wrapper: checkpoint/restart on
+    failure, straggler watchdog, retry budget.  (The *serving*-side
+    refresh supervisor lives in ``repro.serve.supervisor`` — it degrades
+    to stale tables instead of restoring checkpoints.)
 
 At 1000+ node scale the same structure holds: the supervisor runs per-host,
 checkpoints go to distributed storage (the CheckpointManager path becomes a
@@ -20,11 +29,159 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
+import zlib
 from typing import Any, Callable
+
+import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 
 log = logging.getLogger("repro.fault")
+
+
+# ---------------------------------------------------------------------------
+# shared retry backoff
+# ---------------------------------------------------------------------------
+
+def backoff(attempt: int, base: float = 0.05, cap: float = 1.0,
+            seed: int = 0) -> float:
+    """Deterministic exponential backoff + jitter, in seconds.
+
+    ``min(cap, base·2^attempt)`` scaled by a jitter factor in [0.5, 1.0)
+    drawn from a ``(seed, attempt)``-keyed generator — so two runs with
+    the same seed sleep the same schedule (reproducible tests), while
+    different seeds decorrelate retry storms across workers.  Every
+    retry loop in the repo (prefetcher transfers, the serve-side refresh
+    supervisor) shares this one schedule.
+    """
+    if attempt < 0:
+        raise ValueError(f"attempt must be ≥ 0, got {attempt}")
+    span = min(float(cap), float(base) * (2.0 ** attempt))
+    jitter = 0.5 + 0.5 * np.random.default_rng((seed, attempt)).random()
+    return span * jitter
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+class FaultInjected(RuntimeError):
+    """An injected (not organic) failure — raised by ``FaultPlan.check``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One site's injection rule.
+
+    ``hits``  — check indices (0-based, per-site counter) that raise;
+                e.g. ``{0, 1, 2}`` fails the first three checks of the
+                site then clears — the shape retry/breaker tests need.
+    ``prob``  — additionally raise with this probability per check,
+                from a ``(seed, site)``-keyed deterministic stream.
+    """
+
+    site: str
+    hits: frozenset = frozenset()
+    prob: float = 0.0
+
+    def __post_init__(self):
+        if not self.site:
+            raise ValueError("FaultSpec needs a site name")
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"prob must be in [0, 1], got {self.prob}")
+
+
+class FaultPlan:
+    """Deterministic, seedable multi-site failure injection.
+
+    The generalization of the old step-targeted ``FailureInjector``:
+    faults are keyed by *site* (where in the pipeline) and fire either at
+    targeted per-site check counts or probabilistically from a seeded
+    stream — so a faulted run is exactly reproducible, and a retry loop
+    that re-checks the site observes the fault clear at a known attempt.
+
+        plan = FaultPlan([FaultSpec("ingest", hits={0, 1})], seed=0)
+        plan.check("ingest")   # raises FaultInjected (check #0)
+        plan.check("ingest")   # raises FaultInjected (check #1)
+        plan.check("ingest")   # passes — the fault has cleared
+
+    ``parse`` builds a plan from the ``--inject-faults`` CLI grammar:
+    comma-separated ``site@i:j:k`` (targeted check indices) and/or
+    ``site%p`` (probability) terms, e.g.
+    ``"ingest@0:1,refresh@2,transfer%0.1,publish@0"``.
+    """
+
+    def __init__(self, specs=(), seed: int = 0):
+        self.seed = int(seed)
+        self._specs: dict[str, FaultSpec] = {}
+        for s in specs:
+            if s.site in self._specs:
+                raise ValueError(f"duplicate FaultSpec for site {s.site!r}")
+            self._specs[s.site] = s
+        self._counts: dict[str, int] = {}
+        self._fired: dict[str, int] = {}
+        self._rngs: dict[str, np.random.Generator] = {}
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultPlan":
+        """Build a plan from the CLI grammar (see class docstring)."""
+        specs = []
+        for term in filter(None, (t.strip() for t in text.split(","))):
+            if "%" in term:
+                site, _, p = term.partition("%")
+                specs.append(FaultSpec(site, prob=float(p)))
+            elif "@" in term:
+                site, _, idxs = term.partition("@")
+                hits = frozenset(int(i) for i in idxs.split(":") if i != "")
+                if not hits:
+                    raise ValueError(f"no check indices in {term!r}")
+                specs.append(FaultSpec(site, hits=hits))
+            else:
+                raise ValueError(
+                    f"bad fault term {term!r} (want site@i:j or site%p)")
+        return cls(specs, seed=seed)
+
+    # -- injection ------------------------------------------------------------
+
+    def check(self, site: str) -> None:
+        """Advance ``site``'s check counter; raise ``FaultInjected`` if
+        the spec fires at this check.  Sites without a spec pass free
+        (one dict lookup), so production code can leave checks in."""
+        n = self._counts.get(site, 0)
+        self._counts[site] = n + 1
+        spec = self._specs.get(site)
+        if spec is None:
+            return
+        fire = n in spec.hits
+        if not fire and spec.prob:
+            rng = self._rngs.get(site)
+            if rng is None:
+                rng = self._rngs[site] = np.random.default_rng(
+                    (self.seed, zlib.crc32(site.encode())))
+            fire = rng.random() < spec.prob
+        if fire:
+            self._fired[site] = self._fired.get(site, 0) + 1
+            raise FaultInjected(
+                f"injected {site} fault (check #{n} of site {site!r})")
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def fired(self) -> int:
+        """Total faults raised so far, across all sites."""
+        return sum(self._fired.values())
+
+    def fired_by_site(self) -> dict[str, int]:
+        return dict(self._fired)
+
+    def checks(self, site: str) -> int:
+        return self._counts.get(site, 0)
+
+    def clear(self) -> None:
+        """Drop all specs (keep counters): the 'injector removed' state."""
+        self._specs.clear()
 
 
 @dataclasses.dataclass

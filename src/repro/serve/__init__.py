@@ -43,8 +43,15 @@ from .frontend import (
     run_closed_loop,
 )
 from .policy import ShardDecision, ShardPolicy, choose_shard_mode
+from .supervisor import (
+    DriftTracker, RefreshSupervisor, SupervisorConfig, window_block,
+)
 
 __all__ = [
+    "RefreshSupervisor",
+    "SupervisorConfig",
+    "DriftTracker",
+    "window_block",
     "TuckerServer",
     "load_params_from_checkpoint",
     "bucket_ladder",

@@ -749,7 +749,7 @@ class TuckerServer:
         Returns the new ``table_version`` (unchanged if ``ids`` is empty).
         """
         mode = self._check_mode(mode)
-        ids = self._check_ids(ids, mode)
+        ids = self._check_ids(ids, mode, grow_hint=True)
         if len(np.unique(ids)) != len(ids):
             raise ValueError(f"update_rows ids must be unique, got "
                              f"{len(ids) - len(np.unique(ids))} duplicates")
@@ -799,6 +799,34 @@ class TuckerServer:
                                tuple(colsums))
         return self._live.version
 
+    def sync_factor_rows(self, mode: int, ids, factor_rows) -> None:
+        """Write changed factor rows into ``self.params`` WITHOUT
+        publishing a table generation.
+
+        The rebuild-escalation half of the refresh supervisor: when drift
+        says the next publish should be a full ``refresh_tables()``, the
+        dirty rows still have to reach the model first — but routing them
+        through ``update_rows`` would pay for (and publish) a delta patch
+        that the rebuild immediately supersedes.  This is the O(dirty)
+        mirror write alone; the same validation as ``update_rows``, same
+        "params stay current" contract, no swap.
+        """
+        mode = self._check_mode(mode)
+        ids = self._check_ids(ids, mode, grow_hint=True)
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError(f"sync_factor_rows ids must be unique, got "
+                             f"{len(ids) - len(np.unique(ids))} duplicates")
+        mirror = self._host_factors[mode]
+        J = int(mirror.shape[1])
+        rows = np.asarray(np.asarray(factor_rows), mirror.dtype)
+        if rows.shape != (len(ids), J):
+            raise ValueError(f"factor_rows must be {(len(ids), J)}, "
+                             f"got {tuple(rows.shape)}")
+        if len(ids) == 0:
+            return
+        mirror[ids] = rows
+        self._params_stale = True
+
     def refresh_tables(self) -> int:
         """Full-table rebuild from the current ``self.params`` + swap.
 
@@ -838,13 +866,21 @@ class TuckerServer:
             raise ValueError(f"mode {mode} outside 0..{self.order - 1}")
         return mode
 
-    def _check_ids(self, ids, mode: int) -> np.ndarray:
+    def _check_ids(self, ids, mode: int, *, grow_hint: bool = False
+                   ) -> np.ndarray:
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         if ids.ndim != 1:
             raise ValueError(f"ids must be 1-D, got shape {ids.shape}")
         if ids.size and (ids.min() < 0 or ids.max() >= self.dims[mode]):
-            raise ValueError(
-                f"ids out of range for mode {mode} (I={self.dims[mode]})")
+            bad = ids[(ids < 0) | (ids >= self.dims[mode])]
+            msg = (f"ids out of range for mode {mode}: id {int(bad[0])} "
+                   f"vs built dim I={self.dims[mode]}")
+            if grow_hint:
+                msg += (" — online dim growth is not supported: the serving"
+                        " tables are built at fixed mode sizes, so new"
+                        " entities need a server rebuild from params with"
+                        " the grown factor (see ROADMAP 'dim growth')")
+            raise ValueError(msg)
         return ids
 
     def _place_tables(self, tables) -> tuple:

@@ -56,12 +56,31 @@ class AdmissionConfig:
     ``max_wait_ms`` — flush timer: a lone request never waits longer
                       than this for company, bounding added latency at
                       low traffic.
+    ``slo_ms``      — latency SLO budget (milliseconds): a float applies
+                      one budget to every request-size bucket, a dict
+                      maps bucket → budget (buckets without an entry are
+                      unbudgeted).  A served request whose latency
+                      exceeds its bucket's budget increments
+                      ``FrontendStats.slo_violations[bucket]`` — the
+                      alarm counter, not an enforcement mechanism (the
+                      answer is still delivered; ``deadline_ms`` is the
+                      enforcement knob).
     """
 
     max_queue: int = 4096
     deadline_ms: float = 200.0
     microbatch: int = 256
     max_wait_ms: float = 2.0
+    slo_ms: float | dict | None = None
+
+    def slo_for(self, bucket: int) -> float | None:
+        """The SLO budget (ms) covering ``bucket``, or None."""
+        if self.slo_ms is None:
+            return None
+        if isinstance(self.slo_ms, dict):
+            v = self.slo_ms.get(bucket)
+            return None if v is None else float(v)
+        return float(self.slo_ms)
 
 
 @dataclasses.dataclass
@@ -77,12 +96,22 @@ class FrontendStats:
     table_version: int = 0       # server table version the last flush ran on
     stale_flushes: int = 0       # flushes answered by a version that a
                                  # table swap superseded while in flight
+    degraded_flushes: int = 0    # flushes served while the refresh
+                                 # supervisor reported state=degraded
     latency_ms: list = dataclasses.field(default_factory=list)
     by_bucket: dict = dataclasses.field(default_factory=dict)
+    slo_violations: dict = dataclasses.field(default_factory=dict)
 
-    def record(self, bucket: int, ms: float) -> None:
+    def record(self, bucket: int, ms: float,
+               slo_ms: float | None = None) -> None:
         self.latency_ms.append(ms)
         self.by_bucket.setdefault(bucket, []).append(ms)
+        if slo_ms is not None:
+            # zero-init on first sighting so the report distinguishes
+            # "bucket under budget" (0) from "bucket unbudgeted" (absent)
+            self.slo_violations.setdefault(bucket, 0)
+            if ms > slo_ms:
+                self.slo_violations[bucket] += 1
 
     def percentiles(self, qs: Sequence[float] = (50, 95, 99)) -> dict:
         if not self.latency_ms:
@@ -129,6 +158,7 @@ class ServeFrontend:
         *,
         query: str = "predict",
         top_k_args: tuple | None = None,
+        supervisor=None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if query not in ("predict", "top_k"):
@@ -139,6 +169,9 @@ class ServeFrontend:
                              "target_mode])")
         self.server = server
         self.admission = admission or AdmissionConfig()
+        # optional RefreshSupervisor: flushes served while it reports
+        # degraded are counted (answers still flow — from stale tables)
+        self.supervisor = supervisor
         self.query = query
         self.top_k_args = top_k_args
         self.stats = FrontendStats()
@@ -271,6 +304,9 @@ class ServeFrontend:
             # an online table swap landed while this flush was in flight:
             # its answers are consistent (one version end to end) but stale
             self.stats.stale_flushes += 1
+        if (self.supervisor is not None
+                and self.supervisor.health()["state"] == "degraded"):
+            self.stats.degraded_flushes += 1
         done = self._clock()
         ladder = self.server.ladder
         off = 0
@@ -286,9 +322,9 @@ class ServeFrontend:
             # per-bucket latency keyed by the REQUEST's own size bucket,
             # not the coalesced batch's — p50/p99 per request class is
             # what the closed-loop report labels them as
-            self.stats.record(
-                bucket_for(min(n, ladder[-1]), ladder),
-                (done - p.enqueued) * 1e3)
+            bucket = bucket_for(min(n, ladder[-1]), ladder)
+            self.stats.record(bucket, (done - p.enqueued) * 1e3,
+                              slo_ms=self.admission.slo_for(bucket))
 
     def _serve_batch(self, indices: np.ndarray):
         import jax
@@ -318,6 +354,7 @@ def run_closed_loop(
     query: str = "predict",
     top_k_args: tuple | None = None,
     request_pool: np.ndarray | None = None,
+    supervisor=None,
     seed: int = 0,
 ) -> dict:
     """Drive a front end with ``concurrency`` closed-loop clients at a
@@ -360,7 +397,8 @@ def run_closed_loop(
                                 dtype=np.int32)
 
         async with ServeFrontend(server, admission, query=query,
-                                 top_k_args=top_k_args) as fe:
+                                 top_k_args=top_k_args,
+                                 supervisor=supervisor) as fe:
             t_end = time.monotonic() + duration_s
 
             async def client() -> None:
@@ -391,9 +429,20 @@ def run_closed_loop(
                 "shed_queue_full": int(st.shed_queue_full),
                 "shed_deadline": int(st.shed_deadline),
                 "flushes": int(st.flushes),
+                "stale_flushes": int(st.stale_flushes),
+                "degraded_flushes": int(st.degraded_flushes),
                 "latency_ms": st.percentiles(),
                 "by_bucket": {str(b): v for b, v in
                               st.bucket_percentiles().items()},
+                "slo_budget_ms": (
+                    {str(b): float(v) for b, v in
+                     sorted(fe.admission.slo_ms.items())}
+                    if isinstance(fe.admission.slo_ms, dict)
+                    else fe.admission.slo_ms),
+                "slo_violations": {str(b): int(v) for b, v in
+                                   sorted(st.slo_violations.items())},
+                **({"supervisor": supervisor.health()}
+                   if supervisor is not None else {}),
             }
 
     return asyncio.run(_main())

@@ -79,6 +79,95 @@ def test_incompatible_structure_errors(tmp_path):
         m.restore({"only": jnp.zeros(3)})
 
 
+def test_interrupted_save_leaves_previous_commit(tmp_path, monkeypatch):
+    """Kill the writer mid-leaves: ``latest_step()`` must stay on the
+    previous commit, and the next save sweeps the debris."""
+    m = CheckpointManager(tmp_path)
+    m.save(1, make_tree(1))
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def dying_save(path, arr):
+        calls["n"] += 1
+        if calls["n"] == 3:            # die mid-way through the leaves
+            raise KeyboardInterrupt("simulated kill during leaf write")
+        real_save(path, arr)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    with pytest.raises(KeyboardInterrupt):
+        m.save(2, make_tree(2))
+    monkeypatch.setattr(np, "save", real_save)
+
+    # the half-written step is invisible: no marker, not a step
+    assert m.all_steps() == [1] and m.latest_step() == 1
+    r, s = m.restore(make_tree())
+    assert s == 1
+    trees_equal(make_tree(1), r)
+    # retrying the save succeeds and gc removes the .tmp debris
+    m.save(2, make_tree(2))
+    assert m.all_steps() == [1, 2]
+    assert not any(p.name.endswith(".tmp") for p in tmp_path.iterdir())
+
+
+def test_interrupted_commit_marker_rename(tmp_path, monkeypatch):
+    """Kill between the directory rename and the marker rename: every
+    leaf is in its final directory, but without ``manifest.json`` the
+    step is uncommitted — readers fall back to the previous commit."""
+    m = CheckpointManager(tmp_path)
+    m.save(1, make_tree(1))
+
+    real_replace = os.replace
+    calls = {"n": 0}
+
+    def dying_replace(src, dst):
+        calls["n"] += 1
+        if calls["n"] == 2:            # the marker rename is the 2nd call
+            raise KeyboardInterrupt("simulated kill before commit marker")
+        real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", dying_replace)
+    with pytest.raises(KeyboardInterrupt):
+        m.save(2, make_tree(2))
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    d2 = tmp_path / "step_000000002"
+    assert d2.exists() and not (d2 / "manifest.json").exists()
+    assert (d2 / "manifest.json.staged").exists()   # staged, never commits
+    assert m.all_steps() == [1] and m.latest_step() == 1
+    r, s = m.restore(make_tree())
+    assert s == 1
+    trees_equal(make_tree(1), r)
+    # the retry decommits nothing (step 2 never committed), commits clean
+    m.save(2, make_tree(2))
+    assert m.all_steps() == [1, 2]
+    r2, _ = m.restore(make_tree(), step=2)
+    trees_equal(make_tree(2), r2)
+
+
+def test_interrupted_resave_falls_back_to_older_commit(tmp_path,
+                                                      monkeypatch):
+    """Re-saving an EXISTING step decommits it (marker unlink) before
+    clearing: a kill inside that window loses step 2's old copy but
+    never exposes a half-written one — readers land on step 1."""
+    m = CheckpointManager(tmp_path, keep=10)
+    m.save(1, make_tree(1))
+    m.save(2, make_tree(2))
+
+    def dying_rmtree(path, **kw):
+        raise KeyboardInterrupt("simulated kill while clearing old step")
+
+    import shutil
+    monkeypatch.setattr(shutil, "rmtree", dying_rmtree)
+    with pytest.raises(KeyboardInterrupt):
+        m.save(2, make_tree(3))
+
+    assert m.all_steps() == [1] and m.latest_step() == 1
+    r, s = m.restore(make_tree())
+    assert s == 1
+    trees_equal(make_tree(1), r)
+
+
 def test_save_restore_save_byte_stable(tmp_path):
     m = CheckpointManager(tmp_path, keep=10)
     tree = make_tree()

@@ -368,6 +368,50 @@ def test_append_spilled_reopens_and_snapshots(tmp_path):
                                   old_vals[old_mask])
 
 
+def test_append_spilled_crash_midway_recovers_pre_append(tmp_path,
+                                                        monkeypatch):
+    """A kill between the growth snapshot (``{f}.npy.tmp`` fully written)
+    and the atomic reopen (the ``os.replace`` renames + meta rewrite)
+    must leave the on-disk store exactly the PRE-append store: the
+    published ``.npy`` files and ``meta.json`` are only ever replaced
+    whole, never mutated in place on the growth path."""
+    import os as _os
+
+    t = planted_tensor((14, 11, 9), 1200, seed=7)
+    base, _, _ = _split(t, 500)
+    store = NonzeroStore.build(base, 2, spill_dir=str(tmp_path / "s"))
+    pre = {f: np.asarray(getattr(store, f)).copy()
+           for f in ("indices", "values", "mask")}
+    pre_meta = dict(store.meta)
+    L0 = store.chunk_len
+
+    # a one-bucket burst larger than the chunk forces the regrow path
+    burst_idx = np.zeros((L0 + 1, 3), np.int32)
+    burst_val = np.full(L0 + 1, 2.0, np.float32)
+
+    real_replace = _os.replace
+
+    def dying_replace(src, dst):
+        raise OSError(f"simulated crash before publishing {dst}")
+
+    monkeypatch.setattr(_os, "replace", dying_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        store.append(burst_idx, burst_val)
+    monkeypatch.setattr(_os, "replace", real_replace)
+
+    # recovery = plain open(): the pre-append commit is intact
+    back = NonzeroStore.open(str(tmp_path / "s"))
+    assert back.meta == pre_meta and back.chunk_len == L0
+    for f in ("indices", "values", "mask"):
+        np.testing.assert_array_equal(np.asarray(getattr(back, f)), pre[f])
+    # staged .tmp debris may remain but is invisible to open(); the
+    # recovered store accepts the SAME append cleanly afterwards
+    out = back.append(burst_idx, burst_val)
+    assert out.spilled and out.meta["nnz"] == pre_meta["nnz"] + L0 + 1
+    reopened = NonzeroStore.open(str(tmp_path / "s"))
+    np.testing.assert_array_equal(out.values, reopened.values)
+
+
 def test_append_validates_and_empty_is_noop():
     t = planted_tensor((10, 8, 6), 300, seed=1)
     store = NonzeroStore.build(t, 2)
@@ -425,7 +469,10 @@ def test_prefetcher_recovers_after_reset():
             raise ValueError("transient")
         return store.stratum(pos)
 
-    pf = StratumPrefetcher(flaky_once, lambda p: (p + 1) % S, depth=2)
+    # retries=0 pins the pre-retry behavior this test locks: the FIRST
+    # failure is fatal-and-sticky, and only reset() restarts the walk
+    pf = StratumPrefetcher(flaky_once, lambda p: (p + 1) % S, depth=2,
+                           retries=0)
     try:
         with pytest.raises(RuntimeError):
             pf.take(0)
@@ -434,6 +481,82 @@ def test_prefetcher_recovers_after_reset():
         np.testing.assert_array_equal(np.asarray(idx), store.indices[0])
     finally:
         pf.close()
+
+
+def test_prefetcher_retries_transient_failure():
+    """A transient load failure self-heals inside the retry budget: the
+    walk never dies, the consumer never sees an exception, and the
+    absorbed failures are counted."""
+    t = planted_tensor((14, 11, 9), 600, seed=1)
+    store = NonzeroStore.build(t, 2)
+    S = store.num_strata
+    fails = {0: 2, 3: 1}   # pos → number of leading failures
+
+    def flaky(pos):
+        if fails.get(pos, 0) > 0:
+            fails[pos] -= 1
+            raise OSError(f"transient at {pos}")
+        return store.stratum(pos)
+
+    pf = StratumPrefetcher(flaky, lambda p: (p + 1) % S, depth=2,
+                           retries=2, retry_base_s=1e-4, retry_cap_s=1e-3)
+    try:
+        for pos in range(S):
+            idx, _, _ = pf.take(pos)
+            np.testing.assert_array_equal(np.asarray(idx),
+                                          store.indices[pos])
+        assert pf.retried == 3
+        assert not any(fails.values())
+    finally:
+        pf.close()
+
+
+def test_prefetcher_budget_exhaustion_still_fatal():
+    """retries bound the healing: one more consecutive failure than the
+    budget covers surfaces exactly like the old sticky-fatal path."""
+    t = planted_tensor((14, 11, 9), 600, seed=1)
+    store = NonzeroStore.build(t, 2)
+    S = store.num_strata
+
+    def always_bad(pos):
+        if pos == 1:
+            raise OSError("persistent")
+        return store.stratum(pos)
+
+    pf = StratumPrefetcher(always_bad, lambda p: (p + 1) % S, depth=1,
+                           retries=1, retry_base_s=1e-4, retry_cap_s=1e-3)
+    try:
+        pf.take(0)
+        with pytest.raises(RuntimeError, match="position 1") as ei:
+            pf.take(1)
+        assert isinstance(ei.value.__cause__, OSError)
+    finally:
+        pf.close()
+
+
+def test_prefetcher_fault_plan_transfer_site():
+    """A FaultPlan 'transfer' spec exercises the same retry loop as an
+    organic device_put failure — two hits clear inside retries=2."""
+    from repro.runtime.fault import FaultInjected, FaultPlan, FaultSpec
+
+    t = planted_tensor((14, 11, 9), 600, seed=1)
+    store = NonzeroStore.build(t, 2)
+    S = store.num_strata
+    plan = FaultPlan([FaultSpec("transfer", hits=frozenset({0, 1}))])
+    pf = StratumPrefetcher(store.stratum, lambda p: (p + 1) % S, depth=0,
+                           retries=2, retry_base_s=1e-4, retry_cap_s=1e-3,
+                           fault_plan=plan)
+    idx, _, _ = pf.take(0)
+    np.testing.assert_array_equal(np.asarray(idx), store.indices[0])
+    assert plan.fired == 2 and pf.retried == 2
+
+    # budget below the consecutive-hit count → the injection is fatal
+    plan2 = FaultPlan([FaultSpec("transfer", hits=frozenset({0, 1}))])
+    pf2 = StratumPrefetcher(store.stratum, lambda p: (p + 1) % S, depth=0,
+                            retries=1, retry_base_s=1e-4,
+                            retry_cap_s=1e-3, fault_plan=plan2)
+    with pytest.raises(FaultInjected):
+        pf2.take(0)
 
 
 # ---------------------------------------------------------------------------

@@ -197,6 +197,100 @@ def test_stats_percentiles_and_buckets():
 
 
 # ---------------------------------------------------------------------------
+# SLO alarm counters + degraded-serving visibility
+# ---------------------------------------------------------------------------
+
+def test_admission_slo_for_float_dict_none():
+    assert AdmissionConfig().slo_for(8) is None
+    assert AdmissionConfig(slo_ms=5.0).slo_for(8) == 5.0
+    cfg = AdmissionConfig(slo_ms={8: 2.0, 16: 4.0})
+    assert cfg.slo_for(8) == 2.0 and cfg.slo_for(16) == 4.0
+    assert cfg.slo_for(32) is None          # unbudgeted bucket
+
+
+def test_stats_slo_violation_counter():
+    st = FrontendStats()
+    st.record(8, 1.0, slo_ms=2.0)           # under budget
+    st.record(8, 3.0, slo_ms=2.0)           # over
+    st.record(8, 2.0, slo_ms=2.0)           # AT budget is not a violation
+    st.record(16, 9.0)                      # unbudgeted: no entry at all
+    st.record(32, 0.5, slo_ms=1.0)
+    # zero-init distinguishes "under budget" (0) from "unbudgeted" (absent)
+    assert st.slo_violations == {8: 1, 32: 0}
+
+
+def test_flush_counts_slo_violations_per_bucket(server):
+    """Served answers keep flowing past the budget — the counter is an
+    alarm, not enforcement — and each request counts against its OWN
+    size bucket's budget."""
+    from repro.serve import bucket_for
+
+    reqs = [np.zeros((1, 3), np.int32), np.zeros((12, 3), np.int32)]
+    b_small = bucket_for(1, _server().ladder)
+    b_big = bucket_for(12, _server().ladder)
+    # impossible budget for the small bucket, generous for the big one
+    slo = {b_small: 1e-9, b_big: 1e9}
+
+    async def main():
+        async with ServeFrontend(
+                server, AdmissionConfig(microbatch=13, slo_ms=slo)) as fe:
+            outs = await asyncio.gather(*(fe.submit(r) for r in reqs))
+            return fe.stats, outs
+
+    stats, outs = asyncio.run(main())
+    assert all(o is not None for o in outs)     # answers still delivered
+    assert stats.served == 2
+    assert stats.slo_violations == {b_small: 1, b_big: 0}
+
+
+class _FakeSupervisor:
+    """health()-shaped stand-in: the front end only reads state."""
+
+    def __init__(self, state="degraded"):
+        self.state = state
+
+    def health(self):
+        return {"state": self.state, "generation": 0, "staleness_s": 1.0}
+
+
+def test_flush_counts_degraded_serving(server):
+    async def main(sup):
+        async with ServeFrontend(server, AdmissionConfig(microbatch=4),
+                                 supervisor=sup) as fe:
+            await fe.submit(np.zeros((4, 3), np.int32))
+            return fe.stats
+
+    degraded = asyncio.run(main(_FakeSupervisor("degraded")))
+    assert degraded.flushes == 1 and degraded.degraded_flushes == 1
+    healthy = asyncio.run(main(_FakeSupervisor("ok")))
+    assert healthy.flushes == 1 and healthy.degraded_flushes == 0
+
+
+def test_closed_loop_report_slo_and_supervisor_sections(server):
+    sup = _FakeSupervisor("degraded")
+    rep = run_closed_loop(
+        server, qps=400.0, duration_s=0.5, concurrency=4, max_request=8,
+        admission=AdmissionConfig(slo_ms=1e-9),  # every serve violates
+        supervisor=sup, seed=4)
+    assert rep["served_requests"] > 0
+    assert rep["slo_budget_ms"] == 1e-9
+    assert sum(rep["slo_violations"].values()) == rep["served_requests"]
+    assert all(isinstance(k, str) for k in rep["slo_violations"])
+    assert rep["degraded_flushes"] == rep["flushes"] > 0
+    assert rep["supervisor"]["state"] == "degraded"
+    # JSON-ready end to end (bench rows embed this dict verbatim)
+    json.dumps(rep)
+
+
+def test_closed_loop_report_without_slo_is_unbudgeted(server):
+    rep = run_closed_loop(server, qps=200.0, duration_s=0.3,
+                          concurrency=2, max_request=4, seed=5)
+    assert rep["slo_budget_ms"] is None
+    assert rep["slo_violations"] == {}
+    assert "supervisor" not in rep
+
+
+# ---------------------------------------------------------------------------
 # closed-loop harness
 # ---------------------------------------------------------------------------
 

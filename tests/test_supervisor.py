@@ -1,0 +1,420 @@
+"""Resilient online serving (repro.serve.supervisor + runtime.fault).
+
+Locks the robustness contracts PR 9 adds on top of the PR 8 online loop:
+
+  * ``FaultPlan`` — deterministic, seedable, site-keyed injection (the
+    test harness every failure path below rides on);
+  * fault matrix — for each injected fault class (ingest/append, refresh
+    step, host→device transfer, patch publish): concurrent queries never
+    error and never observe a torn generation, and after the injector
+    clears the supervisor recovers with served tables BITWISE-equal
+    (f32) to a never-faulted run's;
+  * breaker/degraded mode — budget exhaustion keeps serving the stale
+    generation with ``health()`` saying so, then recovers cleanly;
+  * drift escalation — crossing the patched-fraction or colsum-drift
+    threshold switches one publish from ``update_rows`` patches to a
+    single ``refresh_tables()`` rebuild and resets the tracker;
+  * ``sync_factor_rows`` — model sync without a table publish;
+  * ``update_rows`` out-of-range ids name the mode, id, and built dim.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import FastTuckerConfig, init_state
+from repro.core import fasttucker as ft
+from repro.core.sptensor import SparseTensor
+from repro.data.pipeline import NonzeroStore
+from repro.data.synthetic import planted_tensor
+from repro.distributed import get_strategy
+from repro.runtime.fault import (
+    FailureInjector, FaultInjected, FaultPlan, FaultSpec, backoff,
+)
+from repro.serve import (
+    DriftTracker, RefreshSupervisor, SupervisorConfig, TuckerServer,
+)
+
+DIMS = (12, 10, 8)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / backoff units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_targeted_hits_clear():
+    plan = FaultPlan([FaultSpec("ingest", hits=frozenset({0, 2}))])
+    with pytest.raises(FaultInjected, match="ingest"):
+        plan.check("ingest")
+    plan.check("ingest")                      # check 1 passes
+    with pytest.raises(FaultInjected):
+        plan.check("ingest")                  # check 2 fires
+    plan.check("ingest")                      # cleared for good
+    plan.check("unspecified-site")            # free pass
+    assert plan.fired == 2
+    assert plan.fired_by_site() == {"ingest": 2}
+    assert plan.checks("ingest") == 4
+
+
+def test_fault_plan_probabilistic_is_seed_deterministic():
+    def fires(seed):
+        plan = FaultPlan([FaultSpec("transfer", prob=0.5)], seed=seed)
+        out = []
+        for _ in range(40):
+            try:
+                plan.check("transfer")
+                out.append(False)
+            except FaultInjected:
+                out.append(True)
+        return out
+
+    a, b, c = fires(7), fires(7), fires(8)
+    assert a == b                  # same seed → identical fault stream
+    assert a != c                  # different seed decorrelates
+    assert any(a) and not all(a)   # p=0.5 actually mixes
+
+
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse("ingest@0:2,refresh%0.25, publish@1 ", seed=3)
+    with pytest.raises(FaultInjected):
+        plan.check("ingest")
+    plan.check("publish")
+    with pytest.raises(FaultInjected):
+        plan.check("publish")
+    with pytest.raises(ValueError, match="bad fault term"):
+        FaultPlan.parse("refresh")
+    with pytest.raises(ValueError, match="no check indices"):
+        FaultPlan.parse("refresh@")
+    with pytest.raises(ValueError, match="prob"):
+        FaultPlan.parse("refresh%1.5")
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan.parse("a@0,a@1")
+
+
+def test_fault_plan_clear_removes_specs():
+    plan = FaultPlan([FaultSpec("x", prob=1.0)])
+    with pytest.raises(FaultInjected):
+        plan.check("x")
+    plan.clear()
+    plan.check("x")
+    assert plan.fired == 1
+
+
+def test_legacy_failure_injector_still_works():
+    inj = FailureInjector({3})
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError, match="step 3"):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)   # raises once per step only
+
+
+def test_backoff_schedule():
+    # deterministic per (seed, attempt); exponential then capped
+    sched = [backoff(a, base=0.1, cap=0.5, seed=1) for a in range(6)]
+    assert sched == [backoff(a, base=0.1, cap=0.5, seed=1)
+                     for a in range(6)]
+    spans = [0.1, 0.2, 0.4, 0.5, 0.5, 0.5]
+    for got, span in zip(sched, spans):
+        assert 0.5 * span <= got < span      # jitter in [0.5, 1.0)
+    assert backoff(3, seed=1) != backoff(3, seed=2)
+    with pytest.raises(ValueError):
+        backoff(-1)
+
+
+# ---------------------------------------------------------------------------
+# supervisor harness
+# ---------------------------------------------------------------------------
+
+def _setup(seed=0, warmup=4, nnz=500, stream=100):
+    """Warmed-up strategy + server + the streaming tail, shared by every
+    supervisor test (local strategy — the sharded path is covered by the
+    online CLI smoke under the multidevice tier)."""
+    t = planted_tensor(DIMS, nnz, rank=3, core_rank=3, noise=0.05,
+                       seed=seed)
+    idx, val = np.asarray(t.indices), np.asarray(t.values)
+    n_warm = nnz - stream
+    warm_t = SparseTensor(idx[:n_warm], val[:n_warm], DIMS)
+    strategy = get_strategy("local")
+    cfg = FastTuckerConfig(dims=DIMS, ranks=(3,) * 3, core_rank=3,
+                           batch_size=64)
+    plan = strategy.prepare(warm_t, cfg, None, seed=seed)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    dstate = strategy.init(plan, init_state(k1, cfg), k2)
+    step = strategy.make_step(plan)
+    for _ in range(warmup):
+        dstate = step(dstate)
+    return {
+        "strategy": strategy, "plan": plan, "dstate": dstate,
+        "params": strategy.eval_params(plan, dstate),
+        "warm": (idx[:n_warm], val[:n_warm]),
+        "stream": (idx[n_warm:], val[n_warm:]),
+    }
+
+
+def _config(**kw):
+    kw.setdefault("refresh_steps", 2)
+    kw.setdefault("window", 64)
+    kw.setdefault("backoff_base_s", 1e-3)
+    kw.setdefault("backoff_cap_s", 5e-3)
+    kw.setdefault("degraded_retry_s", 5e-3)
+    kw.setdefault("poll_interval_s", 2e-3)
+    return SupervisorConfig(**kw)
+
+
+def _run_rounds(env, fault_plan=None, rounds=2, config=None,
+                recorder=None, query_thread=None):
+    """Drive ``rounds`` submit→drain cycles through a fresh supervisor
+    over a fresh server built from the SAME warmed-up params."""
+    srv = TuckerServer(env["params"])
+    if recorder is not None:
+        recorder(srv)
+    sup = RefreshSupervisor(
+        srv, env["strategy"], env["plan"], env["dstate"],
+        config=config or _config(), fault_plan=fault_plan,
+        history=env["warm"])
+    sup.start()
+    stop_queries = threading.Event()
+    qt = None
+    if query_thread is not None:
+        qt = threading.Thread(target=query_thread,
+                              args=(srv, stop_queries), daemon=True)
+        qt.start()
+    try:
+        s_idx, s_val = env["stream"]
+        per = len(s_val) // rounds
+        for rd in range(rounds):
+            lo, hi = rd * per, (rd + 1) * per
+            sup.submit(s_idx[lo:hi], s_val[lo:hi])
+            assert sup.drain(timeout=60), sup.health()
+    finally:
+        stop_queries.set()
+        if qt is not None:
+            qt.join(timeout=10)
+        sup.stop()
+    return sup
+
+
+@pytest.fixture(scope="module")
+def env():
+    return _setup()
+
+
+# ---------------------------------------------------------------------------
+# the fault matrix: each class degrades, recovers, and recovery is bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("site", ["ingest", "transfer", "refresh",
+                                  "publish"])
+def test_fault_matrix_degrade_recover_bitwise(env, site):
+    """One fault class at a time: enough consecutive hits to blow the
+    retry budget (breaker trip), clearing afterwards.  Concurrent
+    queries must never error and never see a torn generation; after
+    recovery the tables are bitwise what the clean run served."""
+    probe = np.stack([np.arange(8) % d for d in DIMS], 1).astype(np.int32)
+
+    # clean reference: record the probe answer of EVERY published
+    # generation (each update_rows/refresh_tables swap), so the faulted
+    # run's concurrent answers can be matched against the full set
+    allowed: dict[int, bytes] = {}
+
+    def recorder(srv):
+        allowed[0] = np.asarray(srv.predict(probe)).tobytes()
+        orig_u, orig_r = srv.update_rows, srv.refresh_tables
+
+        def u(*a, **kw):
+            v = orig_u(*a, **kw)
+            allowed[v] = np.asarray(srv.predict(probe)).tobytes()
+            return v
+
+        def r():
+            v = orig_r()
+            allowed[v] = np.asarray(srv.predict(probe)).tobytes()
+            return v
+
+        srv.update_rows, srv.refresh_tables = u, r
+
+    clean = _run_rounds(env, rounds=2, recorder=recorder)
+    assert len(allowed) == clean.server.table_version + 1
+
+    # faulted run: 4 consecutive hits vs max_attempts=3 → one breaker
+    # trip + at least one degraded-cadence retry before the site clears
+    fp = FaultPlan([FaultSpec(site, hits=frozenset(range(4)))])
+    answers: list[bytes] = []
+    errors: list[BaseException] = []
+
+    def hammer(srv, stop):
+        while not stop.is_set():
+            try:
+                answers.append(np.asarray(srv.predict(probe)).tobytes())
+            except BaseException as e:  # noqa: BLE001 — the assertion
+                errors.append(e)
+
+    faulted = _run_rounds(env, fault_plan=fp, rounds=2,
+                          query_thread=hammer)
+    h = faulted.health()
+
+    assert not errors, f"concurrent queries errored: {errors[:3]}"
+    assert answers, "query thread never ran"
+    bad = [a for a in answers if a not in allowed.values()]
+    assert not bad, (f"{len(bad)}/{len(answers)} answers match no "
+                    f"published generation — torn read")
+    assert fp.fired == 4 and h["faults_injected"] == 4
+    assert h["breaker_trips"] >= 1 and h["recoveries"] >= 1
+    assert h["retries"] >= 4
+    assert h["generation"] == clean.server.table_version
+    for n in range(len(DIMS)):
+        np.testing.assert_array_equal(
+            np.asarray(faulted.server._tables[n], np.float32),
+            np.asarray(clean.server._tables[n], np.float32),
+            err_msg=f"mode {n}: post-recovery tables ≠ clean run")
+        np.testing.assert_array_equal(
+            np.asarray(faulted.server._colsums[n]),
+            np.asarray(clean.server._colsums[n]))
+
+
+def test_degraded_health_while_stuck(env):
+    """While the breaker is open the server keeps answering from the
+    stale generation and health() reports degraded + staleness + error."""
+    fp = FaultPlan([FaultSpec("refresh", hits=frozenset(range(10_000)))])
+    srv = TuckerServer(env["params"])
+    sup = RefreshSupervisor(srv, env["strategy"], env["plan"],
+                            env["dstate"], config=_config(),
+                            fault_plan=fp, history=env["warm"])
+    sup.start()
+    try:
+        s_idx, s_val = env["stream"]
+        sup.submit(s_idx[:40], s_val[:40])
+        assert not sup.drain(timeout=0.3)   # stuck: the fault never clears
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            h = sup.health()
+            if h["state"] == "degraded":
+                break
+            time.sleep(0.01)
+        assert h["state"] == "degraded", h
+        assert h["breaker_trips"] >= 1
+        assert "refresh" in h["last_error"]
+        assert h["staleness_s"] > 0
+        assert h["generation"] == 0          # nothing ever published
+        assert h["pending_rounds"] == 1
+        # stale serving still works
+        probe = np.stack([np.arange(4) % d for d in DIMS], 1)
+        assert np.asarray(srv.predict(probe)).shape == (4,)
+    finally:
+        sup.stop()
+    assert sup.health()["state"] == "stopped"
+
+
+# ---------------------------------------------------------------------------
+# drift escalation: patches → ONE rebuild, tracker reset, decision on health
+# ---------------------------------------------------------------------------
+
+def test_drift_escalation_colsum_threshold(env):
+    """With the colsum-drift budget just above one round's accumulation,
+    round 0 patches, round 1 escalates to exactly one rebuild (one
+    generation bump) and resets the tracker."""
+    eps = float(np.finfo(np.float32).eps)
+    cfg = _config(max_colsum_drift=eps, max_patched_fraction=1e9)
+    srv = TuckerServer(env["params"])
+    sup = RefreshSupervisor(srv, env["strategy"], env["plan"],
+                            env["dstate"], config=cfg,
+                            history=env["warm"])
+    s_idx, s_val = env["stream"]
+    h0 = sup.run_round(s_idx[:40], s_val[:40])
+    assert h0["last_publish"]["kind"] == "patch"
+    assert h0["drift"]["colsum_drift"] > 0
+    v_before = srv.table_version
+    assert v_before == sum(1 for d in h0["last_dirty"] if d)
+
+    h1 = sup.run_round(s_idx[40:80], s_val[40:80])
+    assert h1["last_publish"]["kind"] == "rebuild"
+    assert "colsum drift" in h1["last_publish"]["reason"]
+    assert h1["rebuilds"] == 1
+    # ONE rebuild = ONE generation bump (patches bump once per mode)
+    assert srv.table_version == v_before + 1
+    # tracker reset: both drift signals back to zero
+    assert h1["drift"]["colsum_drift"] == 0.0
+    assert h1["drift"]["patched_rows"] == [0] * len(DIMS)
+
+    # the rebuild flushed to exactly a fresh server over synced params
+    ref = TuckerServer(srv.params)
+    for n in range(len(DIMS)):
+        np.testing.assert_array_equal(np.asarray(srv._tables[n]),
+                                      np.asarray(ref._tables[n]))
+        np.testing.assert_array_equal(np.asarray(srv._colsums[n]),
+                                      np.asarray(ref._colsums[n]))
+
+
+def test_drift_escalation_patched_fraction(env):
+    """A pending round that would cross the patched-fraction bound
+    rebuilds instead of patching first — the decision includes the
+    pending dirty counts."""
+    cfg = _config(max_patched_fraction=1e-6, max_colsum_drift=1e9)
+    srv = TuckerServer(env["params"])
+    sup = RefreshSupervisor(srv, env["strategy"], env["plan"],
+                            env["dstate"], config=cfg,
+                            history=env["warm"])
+    s_idx, s_val = env["stream"]
+    h = sup.run_round(s_idx[:40], s_val[:40])
+    assert h["last_publish"]["kind"] == "rebuild"
+    assert "patched fraction" in h["last_publish"]["reason"]
+    assert srv.table_version == 1
+
+
+def test_drift_tracker_units():
+    cfg = SupervisorConfig(max_patched_fraction=0.5, max_colsum_drift=1.0)
+    dt = DriftTracker((10, 20), cfg)
+    assert dt.should_rebuild((0, 0)) is None
+    assert dt.should_rebuild((5, 0)) is not None          # 5/10 ≥ 0.5
+    dt.note_patch(0, 3, delta_l1=1.0, scale_l1=1.0)
+    assert dt.patched_rows == [3, 0]
+    assert dt.should_rebuild((2, 0)) is not None          # (3+2)/10 ≥ 0.5
+    assert dt.should_rebuild((0, 0)) is None
+    dt.colsum_drift = 2.0
+    reason = dt.should_rebuild((0, 0))
+    assert reason and "drift" in reason
+    dt.reset()
+    assert dt.patched_rows == [0, 0] and dt.colsum_drift == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine satellites: sync_factor_rows + out-of-range diagnostics
+# ---------------------------------------------------------------------------
+
+def test_sync_factor_rows_updates_model_without_publish(env):
+    srv = TuckerServer(env["params"])
+    rng = np.random.default_rng(0)
+    ids = np.array([1, 4, 7], np.int32)
+    rows = rng.standard_normal((3, srv.params.factors[1].shape[1])) \
+        .astype(np.float32)
+    v = srv.table_version
+    srv.sync_factor_rows(1, ids, rows)
+    assert srv.table_version == v               # no generation published
+    np.testing.assert_array_equal(
+        np.asarray(srv.params.factors[1])[ids], rows)
+    # a rebuild from the synced params equals a fresh server over them
+    srv.refresh_tables()
+    ref = TuckerServer(srv.params)
+    for n in range(srv.order):
+        np.testing.assert_array_equal(np.asarray(srv._tables[n]),
+                                      np.asarray(ref._tables[n]))
+    with pytest.raises(ValueError, match="unique"):
+        srv.sync_factor_rows(0, [1, 1], np.zeros((2, 3), np.float32))
+    with pytest.raises(ValueError, match="out of range"):
+        srv.sync_factor_rows(0, [DIMS[0]], np.zeros((1, 3), np.float32))
+
+
+def test_update_rows_out_of_range_names_mode_id_dim(env):
+    srv = TuckerServer(env["params"])
+    J = srv.params.factors[1].shape[1]
+    with pytest.raises(ValueError) as ei:
+        srv.update_rows(1, [2, DIMS[1] + 5], np.zeros((2, J), np.float32))
+    msg = str(ei.value)
+    assert "out of range" in msg          # the contract older tests lock
+    assert "mode 1" in msg                # which mode
+    assert str(DIMS[1] + 5) in msg        # the offending id
+    assert f"I={DIMS[1]}" in msg          # the built dim
+    assert "dim growth" in msg            # the documented limitation
