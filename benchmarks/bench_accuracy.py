@@ -1,55 +1,128 @@
-"""Fig. 3/4 analogue: accuracy (RMSE/MAE) of cuFastTucker vs cuTucker.
+"""Fig. 3/4 analogue: accuracy (RMSE/MAE) → ``BENCH_accuracy.json``.
 
-Checks the paper's two claims: (1) with R_core = J the Kruskal-core model
-matches (or beats) the full-core model's accuracy; (2) updating
-Factor+Core beats Factor-only. Derived column: final RMSE/MAE.
+Checks the paper's two claims, now as a typed machine-readable document
+(schema ``bench_accuracy/v1``, validated by
+``benchmarks.common.validate_bench_accuracy``) instead of free-text CSV
+rows: (1) with R_core = J the Kruskal-core model matches the full-core
+cuTucker baseline's accuracy (within 10%); (2) updating Factor+Core
+matches or beats Factor-only (within 2%).  Every row must also beat the
+trivial zero predictor (``config.value_rms``).  The validator enforces
+the claims numerically, so CI catches accuracy regressions, not just
+format drift.
+
+    PYTHONPATH=src python -m benchmarks.bench_accuracy \
+        [--smoke] [--out BENCH_accuracy.json]
 """
 from __future__ import annotations
 
-import jax
+import argparse
+import json
+import time
 
-from repro.core import FastTuckerConfig, rmse_mae, train
-from repro.core import cutucker as cu, fasttucker as ft
-from repro.data.synthetic import ratings_tensor
+from .common import BENCH_ACCURACY_SCHEMA, row, validate_bench_accuracy
 
-from .common import row, time_call
-
-DIMS = (1200, 900, 120)
-NNZ = 300_000
-STEPS = 400
+FULL = dict(dims=(1200, 900, 120), nnz=300_000, steps=400,
+            batch=4096, ranks=(4, 8), seed=3)
+SMOKE = dict(dims=(150, 120, 40), nnz=20_000, steps=120,
+             batch=2048, ranks=(4,), seed=3)
 
 
-def run() -> list[str]:
-    t = ratings_tensor(DIMS, NNZ, seed=3)
-    train_t, test_t = t.split(0.1, seed=3)
-    out = []
-    for J in (4, 8):
-        cfg = FastTuckerConfig(dims=DIMS, ranks=(J,) * 3, core_rank=J,
-                               batch_size=4096, alpha_a=0.005,
+def measure(smoke: bool) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core import FastTuckerConfig, rmse_mae, train
+    from repro.core import cutucker as cu
+    from repro.data.synthetic import ratings_tensor
+
+    p = SMOKE if smoke else FULL
+    dims, steps = p["dims"], p["steps"]
+    t = ratings_tensor(dims, p["nnz"], seed=p["seed"])
+    train_t, test_t = t.split(0.1, seed=p["seed"])
+
+    results = []
+    for J in p["ranks"]:
+        cfg = FastTuckerConfig(dims=dims, ranks=(J,) * 3, core_rank=J,
+                               batch_size=p["batch"], alpha_a=0.005,
                                alpha_b=0.0035)
-        _, hist = train(jax.random.PRNGKey(0), train_t, cfg,
-                        num_steps=STEPS, eval_every=STEPS, test=test_t)
-        out.append(row(f"fig3/fast_J{J}_R{J}", 0.0,
-                       f"rmse={hist[-1]['rmse']:.4f};"
-                       f"mae={hist[-1]['mae']:.4f}"))
+        for variant, kw in (("factor+core", {}),
+                            ("factor_only", {"update_core": False})):
+            t0 = time.perf_counter()
+            _, hist = train(jax.random.PRNGKey(0), train_t, cfg,
+                            num_steps=steps, eval_every=steps,
+                            test=test_t, **kw)
+            results.append({
+                "model": "fasttucker", "variant": variant, "rank": J,
+                "rmse": float(hist[-1]["rmse"]),
+                "mae": float(hist[-1]["mae"]),
+                "train_s": time.perf_counter() - t0,
+            })
 
-        _, hist_f = train(jax.random.PRNGKey(0), train_t, cfg,
-                          num_steps=STEPS, eval_every=STEPS, test=test_t,
-                          update_core=False)
-        out.append(row(f"fig4/fast_J{J}_factor_only", 0.0,
-                       f"rmse={hist_f[-1]['rmse']:.4f};"
-                       f"mae={hist_f[-1]['mae']:.4f}"))
-
-        ccfg = cu.CuTuckerConfig(dims=DIMS, ranks=(J,) * 3,
-                                 batch_size=4096, alpha_a=0.005,
+        ccfg = cu.CuTuckerConfig(dims=dims, ranks=(J,) * 3,
+                                 batch_size=p["batch"], alpha_a=0.005,
                                  alpha_g=0.0035)
+        t0 = time.perf_counter()
         cstate = cu.init_state(jax.random.PRNGKey(0), ccfg)
         key = jax.random.PRNGKey(1)
-        for i in range(STEPS):
+        for _ in range(steps):
             key, sub = jax.random.split(key)
             cstate = cu.sgd_step(cstate, sub, train_t.indices,
                                  train_t.values, ccfg)
+        jax.block_until_ready(cstate.params.factors)
+        train_s = time.perf_counter() - t0
         r, m = rmse_mae(cstate.params, test_t, cu.predict)
-        out.append(row(f"fig3/cutucker_J{J}", 0.0,
-                       f"rmse={float(r):.4f};mae={float(m):.4f}"))
-    return out
+        results.append({
+            "model": "cutucker", "variant": "baseline", "rank": J,
+            "rmse": float(r), "mae": float(m), "train_s": train_s,
+        })
+
+    return {
+        "config": {
+            "dims": list(dims), "nnz": p["nnz"], "steps": steps,
+            "batch": p["batch"], "seed": p["seed"],
+            "value_rms": float(np.sqrt(np.mean(
+                np.asarray(test_t.values) ** 2))),
+        },
+        "results": results,
+    }
+
+
+def run(smoke: bool = False, out_path: str | None = None) -> dict:
+    import jax
+
+    res = measure(smoke)
+    doc = {
+        "schema": BENCH_ACCURACY_SCHEMA,
+        "generated_by": "benchmarks/bench_accuracy.py",
+        "smoke": smoke,
+        "platform": jax.default_backend(),
+        **res,
+    }
+    validate_bench_accuracy(doc)
+
+    steps = doc["config"]["steps"]
+    for r in doc["results"]:
+        row(f"acc/{r['model']}_{r['variant']}_J{r['rank']}",
+            r["train_s"] / steps * 1e6,
+            f"rmse={r['rmse']:.4f};mae={r['mae']:.4f}")
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {out_path}", flush=True)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / short runs (CI schema check)")
+    ap.add_argument("--out", default="",
+                    help="write the validated BENCH_accuracy.json here")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out or None)
+
+
+if __name__ == "__main__":
+    main()

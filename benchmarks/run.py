@@ -21,6 +21,7 @@ MODULES = {
     "ingest": "benchmarks.bench_ingest",
     "serve": "benchmarks.bench_serve",
     "lm_step": "benchmarks.bench_lm_step",
+    "convergence": "benchmarks.bench_convergence",
 }
 
 

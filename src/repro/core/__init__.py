@@ -1,5 +1,12 @@
 """Core: the paper's contribution — FastTucker STD with Kruskal core + SGD."""
 from .sptensor import SparseTensor, BlockPartition, partition_for_workers
+from .adaptive import (
+    RankController,
+    RankDecision,
+    core_column_energy,
+    refine_factors,
+    resize_core_rank,
+)
 from .fasttucker import (
     FastTuckerConfig,
     FastTuckerParams,
@@ -20,8 +27,23 @@ from .fasttucker import (
 )
 from .metrics import rmse_mae
 from .sampling import SortedBatchLayout, sorted_batch_layout
+from .sketch import (
+    sketch_core_factors,
+    sketch_range_finders,
+    sketch_refine,
+    sketched_init_params,
+)
 
 __all__ = [
+    "RankController",
+    "RankDecision",
+    "core_column_energy",
+    "refine_factors",
+    "resize_core_rank",
+    "sketch_core_factors",
+    "sketch_range_finders",
+    "sketch_refine",
+    "sketched_init_params",
     "SortedBatchLayout",
     "sorted_batch_layout",
     "batch_layout",

@@ -1,0 +1,209 @@
+"""Adaptive Kruskal-core rank: plateau-driven grow/shrink of R_core.
+
+P-Tucker-class results show rank choice dominates the accuracy/cost
+trade-off, but the right R is rarely known up front.  The controller
+here starts small and reacts to the validation-RMSE trajectory:
+
+* **plateau** (relative improvement < ``tol`` for ``patience``
+  consecutive observations) → double the rank, up to ``max_rank``;
+* if the *last* growth bought less than ``grow_gain`` relative RMSE,
+  shrink back to the pre-growth rank and stop adapting (the model is
+  rank-saturated).
+
+Rank moves are powers of two, so a run visits at most
+``log2(max_rank/start) + 1`` distinct ranks — compiled step variants
+stay log-many (each rank is one ``FastTuckerConfig`` hash).  Transitions
+are pure pad/truncate on the core factors (``resize_core_rank``): growth
+appends damped seeded random columns (zero columns would be dead under
+the multiplicative Eq.-17 gradient), shrink keeps the top-``R`` columns
+by multiplicative column energy Π_n‖B^(n)_{:,r}‖ — an exact column
+sub-selection, applied jointly across modes.
+
+``refine_factors`` runs the exact ALS / CCD baselines (``core.als`` /
+``core.ccd``) for a few epochs as a post-transition polish: the Kruskal
+core is materialized once (``kruskal_to_core``), the factor matrices are
+refit against it, and the Kruskal factors are kept untouched (both
+baselines are factor-only, matching the paper's §6.3 protocol).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .fasttucker import FastTuckerConfig, FastTuckerParams, init_scale
+from .sptensor import SparseTensor
+
+
+@dataclasses.dataclass(frozen=True)
+class RankDecision:
+    action: str      # "grow" | "shrink"
+    new_rank: int
+    reason: str
+
+
+class RankController:
+    """Validation-RMSE plateau detector driving rank transitions.
+
+    Feed every eval's RMSE to ``observe``; it returns a ``RankDecision``
+    when the rank should change (the caller applies it via
+    ``resize_core_rank``) and ``None`` otherwise.  ``done`` goes True
+    once growth stopped paying (or ``max_rank`` plateaued) — after that
+    ``observe`` is a no-op.
+    """
+
+    def __init__(self, rank: int, max_rank: int, *, tol: float = 0.01,
+                 patience: int = 2, grow_gain: float = 0.02):
+        if rank < 1 or max_rank < rank:
+            raise ValueError(
+                f"need 1 <= rank <= max_rank, got {rank}, {max_rank}")
+        if tol <= 0 or grow_gain < 0 or patience < 1:
+            raise ValueError("tol > 0, grow_gain >= 0, patience >= 1")
+        self.rank = rank
+        self.max_rank = max_rank
+        self.tol = tol
+        self.patience = patience
+        self.grow_gain = grow_gain
+        self.best: float | None = None     # best RMSE at the current rank
+        self.stale = 0
+        self.grew_from: int | None = None  # rank before the last grow
+        self.pre_grow_best: float | None = None
+        self.done = False
+        self.history: list[tuple[float, int]] = []  # (rmse, rank at obs)
+
+    def observe(self, rmse: float) -> RankDecision | None:
+        rmse = float(rmse)
+        self.history.append((rmse, self.rank))
+        if self.done:
+            return None
+        if self.best is None or rmse < self.best * (1.0 - self.tol):
+            self.best = rmse if self.best is None else min(self.best, rmse)
+            self.stale = 0
+            return None
+        self.best = min(self.best, rmse)
+        self.stale += 1
+        if self.stale < self.patience:
+            return None
+        self.stale = 0
+        # plateaued at the current rank
+        if (self.grew_from is not None
+                and self.best > self.pre_grow_best * (1.0 - self.grow_gain)):
+            new = self.grew_from
+            self.done = True
+            self.rank, self.grew_from = new, None
+            return RankDecision(
+                "shrink", new,
+                f"growth to {self.history[-1][1]} bought < "
+                f"{self.grow_gain:.0%} RMSE — reverting, rank saturated")
+        if self.rank < self.max_rank:
+            self.grew_from = self.rank
+            self.pre_grow_best = self.best
+            self.rank = min(self.rank * 2, self.max_rank)
+            self.best = None
+            return RankDecision(
+                "grow", self.rank,
+                f"plateau at rank {self.grew_from} "
+                f"(no {self.tol:.0%} improvement for {self.patience} evals)")
+        self.done = True
+        return None
+
+
+def core_column_energy(core_factors: tuple[jax.Array, ...]) -> jax.Array:
+    """Multiplicative column energy e_r = Π_n ‖B^(n)_{:,r}‖₂ — the scale
+    of rank-one term r in the Kruskal expansion."""
+    e = None
+    for b in core_factors:
+        norms = jnp.linalg.norm(b.astype(jnp.float32), axis=0)
+        e = norms if e is None else e * norms
+    return e
+
+
+def resize_core_rank(
+    params: FastTuckerParams,
+    cfg: FastTuckerConfig,
+    new_rank: int,
+    key: jax.Array,
+    grow_scale: float = 0.1,
+) -> tuple[FastTuckerParams, FastTuckerConfig]:
+    """Pad or truncate the Kruskal core factors to ``new_rank`` columns.
+
+    Growth appends seeded uniform columns at ``grow_scale`` × the cold
+    init scale — alive under the multiplicative gradient but small enough
+    not to disturb the current fit.  Shrink keeps the ``new_rank``
+    highest-energy columns (original order preserved): an exact joint
+    column sub-selection, so the kept rank-one terms predict identically.
+    Returns the resized params and the rank-updated (frozen-replaced)
+    config; factors A^(n) are untouched either way.
+    """
+    if new_rank < 1:
+        raise ValueError(f"new_rank must be ≥ 1, got {new_rank}")
+    new_cfg = dataclasses.replace(cfg, core_rank=new_rank)
+    R = params.core_factors[0].shape[1]
+    if new_rank == R:
+        return params, new_cfg
+    if new_rank > R:
+        s = grow_scale * init_scale(new_cfg)
+        keys = jax.random.split(key, cfg.order)
+        core = tuple(
+            jnp.concatenate(
+                [b, jax.random.uniform(
+                    keys[n], (b.shape[0], new_rank - R), minval=0.0,
+                    maxval=2 * s, dtype=jnp.float32).astype(b.dtype)],
+                axis=1)
+            for n, b in enumerate(params.core_factors))
+    else:
+        e = core_column_energy(params.core_factors)
+        keep = jnp.sort(jnp.argsort(-e)[:new_rank])
+        core = tuple(b[:, keep] for b in params.core_factors)
+    return FastTuckerParams(params.factors, core), new_cfg
+
+
+def refine_factors(
+    params: FastTuckerParams,
+    cfg: FastTuckerConfig,
+    tensor: SparseTensor,
+    method: str = "als",
+    passes: int = 1,
+) -> FastTuckerParams:
+    """Polish the factor matrices with exact ALS / CCD epochs.
+
+    Materializes the Kruskal core once and runs the requested baseline's
+    factor-only epochs against it in f32 (results rounded back to the
+    storage dtype); the Kruskal core factors pass through unchanged.
+    ``tensor`` should be a bounded subsample — ALS builds (I_n, J, J)
+    Grams over its full nnz.
+    """
+    from . import als as als_mod
+    from . import ccd as ccd_mod
+    from .cutucker import CuTuckerParams
+    from .kruskal import kruskal_to_core
+
+    facs = tuple(f.astype(jnp.float32) for f in params.factors)
+    core = kruskal_to_core(
+        tuple(b.astype(jnp.float32) for b in params.core_factors))
+    cup = CuTuckerParams(facs, core)
+    if method == "als":
+        rcfg = als_mod.ALSConfig(dims=cfg.dims, ranks=cfg.ranks,
+                                 lambda_a=cfg.lambda_a)
+        epoch = als_mod.als_epoch
+    elif method == "ccd":
+        rcfg = ccd_mod.CCDConfig(dims=cfg.dims, ranks=cfg.ranks,
+                                 lambda_a=cfg.lambda_a)
+        epoch = ccd_mod.ccd_epoch
+    else:
+        raise ValueError(f"method must be 'als' or 'ccd', got {method!r}")
+    for _ in range(passes):
+        cup = epoch(cup, tensor, rcfg)
+    factors = tuple(
+        f.astype(p.dtype) for f, p in zip(cup.factors, params.factors))
+    return FastTuckerParams(factors, params.core_factors)
+
+
+__all__ = [
+    "RankDecision",
+    "RankController",
+    "core_column_energy",
+    "resize_core_rank",
+    "refine_factors",
+]

@@ -20,7 +20,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .cutucker import CuTuckerParams, _contract_all, _contract_except
+from .cutucker import CuTuckerParams, _contract_except
+from .cutucker import predict  # noqa: F401  — shared dense-core predict;
+# re-exported so ``als.predict`` keeps working (the local duplicate was
+# byte-identical to ``cutucker.predict``)
 from .fasttucker import gather_rows
 from .sptensor import SparseTensor
 
@@ -75,8 +78,3 @@ def als_epoch(
             p, tensor.indices, tensor.values, n, cfg.dims[n], cfg.lambda_a
         )
     return CuTuckerParams(tuple(factors), params.core)
-
-
-def predict(params: CuTuckerParams, idx: jax.Array) -> jax.Array:
-    rows = gather_rows(params.factors, idx)
-    return _contract_all(params.core, rows)

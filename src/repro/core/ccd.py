@@ -17,7 +17,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .cutucker import CuTuckerParams, _contract_all, _contract_except
+from .cutucker import CuTuckerParams, _contract_except
+from .cutucker import predict  # noqa: F401  — shared dense-core predict;
+# re-exported so ``ccd.predict`` keeps working (the local duplicate was
+# byte-identical to ``cutucker.predict``)
 from .fasttucker import gather_rows
 from .sptensor import SparseTensor
 
@@ -82,8 +85,3 @@ def ccd_epoch(
             p, tensor.indices, tensor.values, n, cfg.dims[n], cfg.lambda_a
         )
     return CuTuckerParams(tuple(factors), params.core)
-
-
-def predict(params: CuTuckerParams, idx: jax.Array) -> jax.Array:
-    rows = gather_rows(params.factors, idx)
-    return _contract_all(params.core, rows)

@@ -120,6 +120,17 @@ class FastTuckerConfig:
                                     # on "xla"; reference-bitwise on Pallas)
     dtype: str = "float32"          # parameter STORAGE dtype (+"bfloat16")
     accum_dtype: str = "float32"    # MXU dot / gradient accumulation dtype
+    init: str = "random"            # "random" | "sketched" (core.sketch
+                                    # randomized warm start; needs nonzeros)
+    sketch_passes: int = 2          # sample passes feeding the range finder
+    sketch_oversample: int = 4      # sketch width = max(ranks) + oversample
+    sketch_batch: int = 0           # samples per pass (0 → batch_size)
+    sketch_core_sweeps: int = 2     # Gauss-Seidel LS sweeps for B^(n)
+    sketch_refine_passes: int = 4   # alternating ALS/core-LS polish passes
+    sketch_refine_batch: int = 0    # factor-solve sample cap (0 → all nnz)
+    warm_step_offset: int = 0       # start the decaying LR schedule here
+                                    # (warm init replaces the cold ramp-in;
+                                    # raise if SGD diverges from a warm start)
     use_kernel: dataclasses.InitVar[bool | None] = None  # DEPRECATED shim
 
     def __post_init__(self, use_kernel: bool | None) -> None:
@@ -139,6 +150,9 @@ class FastTuckerConfig:
             raise ValueError(
                 "accum_dtype must be 'float32' (bf16 storage still "
                 f"accumulates in f32), got {self.accum_dtype!r}")
+        if self.init not in ("random", "sketched"):
+            raise ValueError(
+                f"init must be 'random' or 'sketched', got {self.init!r}")
 
     @property
     def order(self) -> int:
@@ -148,20 +162,48 @@ class FastTuckerConfig:
     def param_dtype(self):
         return jnp.dtype(self.dtype)
 
+    @property
+    def sketch_batch_size(self) -> int:
+        return self.sketch_batch or self.batch_size
 
-def init_params(key: jax.Array, cfg: FastTuckerConfig) -> FastTuckerParams:
+
+def init_scale(cfg: FastTuckerConfig) -> float:
+    """The cold-init uniform half-range s (see ``init_params``)."""
+    if cfg.init_scale is not None:
+        return cfg.init_scale
+    meanJ = sum(cfg.ranks) / cfg.order
+    return float(
+        (1.0 / cfg.core_rank) ** (0.5 / cfg.order) / jnp.sqrt(meanJ))
+
+
+def init_params(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    indices: jax.Array | None = None,
+    values: jax.Array | None = None,
+) -> FastTuckerParams:
     """Initialize so that E[x̂] has unit-ish scale.
 
     x̂ sums R terms, each a product of N dot products of J-vectors; with
     entries ~ U(0, s) the magnitude is ≈ R (s²J)^N, so pick
     s = (1/(R)^{1/N} / J)^{1/2} scaled — matching SGD_Tucker-style init.
+
+    With ``cfg.init == "sketched"`` the randomized warm start
+    (``core.sketch``) runs instead: it needs the training nonzeros, so
+    ``indices``/``values`` become required.  The random path ignores them
+    and is bit-for-bit the original initialization.
     """
+    if cfg.init == "sketched":
+        if indices is None or values is None:
+            raise ValueError(
+                "init='sketched' needs the training nonzeros: pass "
+                "indices/values to init_params/init_state")
+        from .sketch import sketched_init_params
+
+        return sketched_init_params(key, cfg, indices, values)
     N = cfg.order
     keys = jax.random.split(key, 2 * N)
-    scale = cfg.init_scale
-    if scale is None:
-        meanJ = sum(cfg.ranks) / N
-        scale = float((1.0 / cfg.core_rank) ** (0.5 / N) / jnp.sqrt(meanJ))
+    scale = init_scale(cfg)
     # draw in f32 regardless of storage dtype (same random stream), then
     # round down — bf16 params are the rounded f32 initialization
     factors = tuple(
@@ -501,8 +543,19 @@ class TrainState(NamedTuple):
     step: jax.Array  # int32 scalar
 
 
-def init_state(key: jax.Array, cfg: FastTuckerConfig) -> TrainState:
-    return TrainState(init_params(key, cfg), jnp.asarray(0, jnp.int32))
+def init_state(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    indices: jax.Array | None = None,
+    values: jax.Array | None = None,
+) -> TrainState:
+    """Fresh ``TrainState``.  A sketched warm start may begin the
+    decaying LR schedule at ``cfg.warm_step_offset`` (the init replaces
+    the cold ramp-in, so the schedule resumes where an equivalent cold
+    run would be); the random path always starts at step 0."""
+    step = cfg.warm_step_offset if cfg.init == "sketched" else 0
+    return TrainState(init_params(key, cfg, indices, values),
+                      jnp.asarray(step, jnp.int32))
 
 
 def _sgd_update(p: jax.Array, lr: jax.Array, g: jax.Array) -> jax.Array:
@@ -838,7 +891,7 @@ def train(
     from .metrics import rmse_mae
 
     key, init_key = jax.random.split(key)
-    state = init_state(init_key, cfg)
+    state = init_state(init_key, cfg, tensor.indices, tensor.values)
     history: list[dict] = []
     for step in range(num_steps):
         key, sub = jax.random.split(key)

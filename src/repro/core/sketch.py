@@ -1,0 +1,414 @@
+"""Randomized sketched warm-start (``FastTuckerConfig(init="sketched")``).
+
+Cold SGD spends its first few hundred steps escaping a uniform random
+init — and with the paper's decaying learning rate it then *plateaus*
+well above the noise floor (the LR is spent before the fine structure
+is learned).  This module buys both back with cheap sketched solves
+over *sampled nonzeros* — the tensor is never densified and every stage
+reuses machinery the trainer already has:
+
+1. **Range finders for A^(n)** (Parallel Randomized Tucker style).  Draw
+   per-mode Gaussian test matrices ``G^(k) ∈ R^{I_k × R_s}`` and form the
+   sampled Khatri–Rao sketch of each matricization,
+
+       Y_n[i_n, :] = Σ_{(i_1..i_N, x) ∈ Ψ}  x · Π_{k≠n} G^(k)[i_k, :],
+
+   which is computable in O(|Ψ|·N·R_s) from COO samples.  The per-sample
+   products are exactly the Eq.-13 exclusive products with *identity*
+   Kruskal factors, so they run through the kernel-backend registry's
+   fused ``kruskal_grad`` op (one ``pallas_call`` on the Pallas
+   backends), and the row accumulation is ONE global
+   ``scatter_row_grads`` over the concatenated sample set.  A reduced QR
+   of each ``Y_n`` then yields orthonormal warm factors ``A^(n)``.
+
+2. **Sketched least squares for B^(n)**.  With the warm ``A^(n)`` fixed,
+   x̂ is *linear* in each Kruskal core factor:  x̂_b = ⟨vec B^(n),
+   rows_n[b] ⊗ pexc_b⟩.  A couple of Gauss–Seidel sweeps solve the
+   ridge-regularized normal equations (J_n·R × J_n·R — small) per mode
+   over fresh sample draws, with the mode products c^(k) routed through
+   the registry's ``mode_dot`` op.
+
+3. **Alternating refinement** (``sketch_refine_passes``).  At realistic
+   sparsities the zero-imputed sketch captures the dominant subspace
+   only partially (the masking noise is spectrally comparable to the
+   planted components — see docs/convergence.md), so stages 1–2 alone
+   land near the data scale.  Each refinement pass alternates one exact
+   P-Tucker factor epoch (``core.als.als_update_mode`` row solves
+   against the materialized Kruskal core — the same baseline the
+   adaptive-rank controller reuses) with one sketched core LS sweep on a
+   fresh sample draw.  Alternating LS contracts fast: 3–4 passes reach
+   the noise floor on planted data where plain SGD plateaus 2× above
+   it.
+
+Between stages the iterate is kept numerically tame by two
+prediction-preserving transforms (``_rebalance``: pin factor columns to
+the cold init scale and CP-style geometric balancing of the core-factor
+columns) plus one *damping* (``_damp_core``: if the stage-2 LS
+overshoots, shrink predictions back to the data RMS — the only step
+that changes predictions, guarding the f32 refinement against overflow
+from near-singular LS solves).
+
+Determinism and sharding: the sample picks are a pure function of the
+init key (``core.sampling.sample_batch_arrays`` per pass), per-sample
+contributions are order-free, and every cross-sample reduction is a
+single global op over the concatenated samples — so the warm start is
+bitwise-deterministic under a fixed seed and bitwise-invariant to how
+the contribution computation is sharded (``num_shards``), mirroring the
+``TensorStream`` replay guarantees.  Property tests lock all three.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from .fasttucker import (
+    FastTuckerConfig, FastTuckerParams, gather_rows, init_scale,
+    scatter_row_grads,
+)
+from .sampling import sample_batch_arrays
+
+# key-derivation salts: each stage folds its own constant into the init
+# key so the draws are independent streams of one seed
+_SALT_GAUSS = 101        # per-mode Gaussian test matrices
+_SALT_SAMPLES = 102      # range-finder sample passes
+_SALT_FILL = 103         # fallback columns when the sketch is too narrow
+_SALT_CORE = 104         # core-factor LS starting point
+_SALT_CORE_SAMPLES = 105  # per-sweep/mode LS sample draws
+_SALT_DAMP = 106         # damping-estimate sample draw
+_SALT_REFINE = 107       # per-refine-pass core LS sample draws (+ pass)
+
+
+def _shard_slices(total: int, num_shards: int) -> list[tuple[int, int]]:
+    """Contiguous [start, stop) slices covering ``total`` samples."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be ≥ 1, got {num_shards}")
+    num_shards = min(num_shards, total)
+    base, rem = divmod(total, num_shards)
+    bounds = [0]
+    for s in range(num_shards):
+        bounds.append(bounds[-1] + base + (1 if s < rem else 0))
+    return [(bounds[s], bounds[s + 1]) for s in range(num_shards)]
+
+
+def sketch_samples(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    indices: jax.Array,
+    values: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """The concatenated range-finder sample set: ``sketch_passes`` draws
+    of ``sketch_batch_size`` nonzeros each, a pure function of ``key``
+    (one ``sample_batch_arrays`` per pass, pass index folded in)."""
+    idxs, vals = [], []
+    for p in range(cfg.sketch_passes):
+        i, v = sample_batch_arrays(jax.random.fold_in(key, p),
+                                   indices, values, cfg.sketch_batch_size)
+        idxs.append(i)
+        vals.append(v)
+    return jnp.concatenate(idxs), jnp.concatenate(vals)
+
+
+def _sketch_contributions(bk, gausses, idx, val, accum_dtype):
+    """Per-sample Khatri–Rao contributions x·Π_{k≠n}G-rows, tuple of
+    (B, R_s) per mode — the fused-gradient kernel with identity Kruskal
+    factors: row_grads[n] = err_override · (pexc_n @ I) = x · pexc_n."""
+    rows = gather_rows(gausses, idx)
+    R_s = gausses[0].shape[1]
+    eye = tuple(jnp.eye(R_s, dtype=jnp.float32) for _ in gausses)
+    kg = bk.kruskal_grad(
+        rows, eye, jnp.zeros_like(val),
+        lambda_a=0.0, lambda_b=0.0, row_mean=False, core_mean=False,
+        err_override=val, want_core=False, accum_dtype=accum_dtype,
+    )
+    return kg.row_grads
+
+
+def sketch_range_finders(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    indices: jax.Array,
+    values: jax.Array,
+    *,
+    num_shards: int = 1,
+) -> tuple[jax.Array, ...]:
+    """Warm factor matrices A^(n): sampled sketch → QR range finder.
+
+    Returns per-mode (I_n, J_n) f32 arrays with orthonormal columns
+    (QᵀQ = I up to float error).  When the reduced QR yields fewer than
+    J_n columns (I_n < sketch width), the remainder is filled from a
+    seeded cold-scale uniform draw so shapes always hold.
+    """
+    N = cfg.order
+    bk = dispatch.get_backend(cfg.backend)
+    R_s = max(cfg.ranks) + cfg.sketch_oversample
+    g_keys = jax.random.split(jax.random.fold_in(key, _SALT_GAUSS), N)
+    gausses = tuple(
+        jax.random.normal(g_keys[n], (cfg.dims[n], R_s), jnp.float32)
+        for n in range(N))
+
+    idx, val = sketch_samples(jax.random.fold_in(key, _SALT_SAMPLES),
+                              cfg, indices, values)
+    val = val.astype(jnp.float32)
+
+    # per-sample contributions shard-wise (order-free), then ONE global
+    # scatter over the concatenated set — the bitwise shard-invariance
+    # hinge: reductions never happen per shard
+    parts = [
+        _sketch_contributions(bk, gausses, idx[a:b], val[a:b],
+                              cfg.accum_dtype)
+        for a, b in _shard_slices(idx.shape[0], num_shards)
+    ]
+    contrib = tuple(
+        jnp.concatenate([p[n] for p in parts]) for n in range(N))
+    Y = scatter_row_grads(gausses, idx, contrib, backend=cfg.backend)
+
+    fill_keys = jax.random.split(jax.random.fold_in(key, _SALT_FILL), N)
+    s = init_scale(cfg)
+    factors = []
+    for n in range(N):
+        q, _ = jnp.linalg.qr(Y[n])          # (I_n, min(I_n, R_s))
+        a = q[:, : cfg.ranks[n]]
+        short = cfg.ranks[n] - a.shape[1]
+        if short > 0:
+            extra = jax.random.uniform(
+                fill_keys[n], (cfg.dims[n], short), minval=0.0,
+                maxval=2 * s, dtype=jnp.float32)
+            a = jnp.concatenate([a, extra], axis=1)
+        factors.append(a)
+    return tuple(factors)
+
+
+def sketch_core_factors(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    factors: tuple[jax.Array, ...],
+    indices: jax.Array,
+    values: jax.Array,
+    *,
+    num_shards: int = 1,
+) -> tuple[jax.Array, ...]:
+    """Warm Kruskal core factors B^(n) by sketched ridge least squares.
+
+    Per sweep and mode, over a fresh seeded sample draw: build the
+    per-sample design D_b = rows_n[b] ⊗ pexc_b (linear in vec B^(n)) and
+    solve (DᵀD + λI) vec B = Dᵀx.  Mode products go through the backend
+    registry's ``mode_dot``; per-sample designs are computed shard-wise,
+    the Gram/RHS reductions over the concatenated designs.
+    """
+    N = cfg.order
+    R = cfg.core_rank
+    bk = dispatch.get_backend(cfg.backend)
+    b_keys = jax.random.split(jax.random.fold_in(key, _SALT_CORE), N)
+    s = init_scale(cfg)
+    core = [
+        jax.random.uniform(b_keys[n], (cfg.ranks[n], R), minval=0.0,
+                           maxval=2 * s, dtype=jnp.float32)
+        for n in range(N)
+    ]
+    k_samples = jax.random.fold_in(key, _SALT_CORE_SAMPLES)
+    B_batch = cfg.sketch_batch_size
+    for sweep in range(cfg.sketch_core_sweeps):
+        for n in range(N):
+            kb = jax.random.fold_in(k_samples, sweep * N + n)
+            idx, val = sample_batch_arrays(kb, indices, values, B_batch)
+            val = val.astype(jnp.float32)
+            parts = []
+            for a, b in _shard_slices(idx.shape[0], num_shards):
+                rows = gather_rows(factors, idx[a:b])
+                c = [bk.mode_dot(rows[k], core[k],
+                                 accum_dtype=cfg.accum_dtype)
+                     for k in range(N)]
+                pexc = None
+                for k in range(N):
+                    if k == n:
+                        continue
+                    pexc = c[k] if pexc is None else pexc * c[k]
+                # D_b = rows_n[b] ⊗ pexc_b flattened to (b, J_n·R)
+                d = (rows[n][:, :, None] * pexc[:, None, :]).reshape(
+                    b - a, cfg.ranks[n] * R)
+                parts.append(d)
+            D = jnp.concatenate(parts)
+            core[n] = _ridge_core_solve(cfg, n, D, val)
+    return tuple(core)
+
+
+def _ridge_core_solve(cfg, n, D, val):
+    """Solve (DᵀD + λI) vec B = Dᵀval with a *scale-relative* ridge.
+
+    The orthonormal warm A^(n) make the design magnitudes tiny (entries
+    ~ Π 1/√I_k), so an absolute λ_b·B ridge would swamp the signal and
+    collapse B to zero — dead under the multiplicative Eq.-17 gradient.
+    Shrink by a λ_b fraction of the Gram's own scale instead.
+    """
+    JR = cfg.ranks[n] * cfg.core_rank
+    gram = D.T @ D
+    lam = cfg.lambda_b * (jnp.trace(gram) / JR + 1e-30)
+    gram = gram + lam * jnp.eye(JR, dtype=jnp.float32)
+    return jnp.linalg.solve(gram, D.T @ val).reshape(
+        cfg.ranks[n], cfg.core_rank)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _refine_pass(factors, core, idx, val, sidx, sval, cfg):
+    """One alternating-LS pass: exact P-Tucker factor epoch against the
+    materialized Kruskal core (``als_update_mode`` row solves over the
+    ``idx``/``val`` set), then one sketched core-LS sweep over the fresh
+    ``sidx``/``sval`` draw.  Fully jitted — one compile per config."""
+    from .als import als_update_mode
+    from .cutucker import CuTuckerParams
+    from .kruskal import kruskal_to_core
+
+    N = cfg.order
+    dense = kruskal_to_core(core)
+    facs = list(factors)
+    for n in range(N):
+        p = CuTuckerParams(tuple(facs), dense)
+        facs[n] = als_update_mode(p, idx, val, n, cfg.dims[n], cfg.lambda_a)
+    factors = tuple(facs)
+    core = list(core)
+    rows = gather_rows(factors, sidx)
+    for n in range(N):
+        c = [rows[k] @ core[k] for k in range(N)]
+        pexc = None
+        for k in range(N):
+            if k == n:
+                continue
+            pexc = c[k] if pexc is None else pexc * c[k]
+        D = (rows[n][:, :, None] * pexc[:, None, :]).reshape(
+            sidx.shape[0], cfg.ranks[n] * cfg.core_rank)
+        core[n] = _ridge_core_solve(cfg, n, D, sval)
+    return factors, tuple(core)
+
+
+def sketch_refine(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    factors: tuple[jax.Array, ...],
+    core: tuple[jax.Array, ...],
+    indices: jax.Array,
+    values: jax.Array,
+) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...]]:
+    """``cfg.sketch_refine_passes`` alternating-LS passes (stage 3).
+
+    The factor epochs run over the full observed set by default
+    (``sketch_refine_batch=0``) — alternating LS escapes the sketch's
+    residual plateau reliably only with well-conditioned row solves; cap
+    with ``sketch_refine_batch`` for huge tensors (may need more
+    passes).  Core sweeps always use fresh ``sketch_batch_size`` draws.
+    """
+    if cfg.sketch_refine_batch:
+        ridx, rval = sample_batch_arrays(
+            jax.random.fold_in(key, _SALT_REFINE - 1), indices, values,
+            cfg.sketch_refine_batch)
+    else:
+        ridx, rval = indices, values
+    rval = rval.astype(jnp.float32)
+    for p in range(cfg.sketch_refine_passes):
+        sidx, sval = sample_batch_arrays(
+            jax.random.fold_in(key, _SALT_REFINE + p), indices, values,
+            cfg.sketch_batch_size)
+        factors, core = _refine_pass(factors, core, ridx, rval, sidx,
+                                     sval.astype(jnp.float32), cfg)
+    return factors, core
+
+
+def _damp_core(cfg, factors, core, idx, val):
+    """Shrink the core factors so prediction RMS ≤ value RMS on ``idx``.
+
+    The stage-2 LS can overshoot (near-singular Grams on a weak sketch
+    subspace produce huge-norm B); products of such factors overflow f32
+    inside the refinement.  One global shrink β^(1/N) per mode bounds
+    the model at the data scale — a no-op (β=1) for healthy fits.
+    """
+    rows = gather_rows(factors, idx)
+    c = None
+    for k in range(cfg.order):
+        ck = rows[k] @ core[k]
+        c = ck if c is None else c * ck
+    pred_rms = jnp.sqrt(jnp.mean(jnp.sum(c, -1) ** 2))
+    val_rms = jnp.sqrt(jnp.mean(val.astype(jnp.float32) ** 2))
+    beta = jnp.minimum(
+        1.0, val_rms / jnp.maximum(pred_rms, 1e-30)) ** (1.0 / cfg.order)
+    return tuple(b * beta for b in core)
+
+
+def _rebalance(
+    cfg: FastTuckerConfig,
+    factors: tuple[jax.Array, ...],
+    core: tuple[jax.Array, ...],
+) -> tuple[tuple[jax.Array, ...], tuple[jax.Array, ...]]:
+    """Prediction-preserving rescale to SGD-friendly magnitudes.
+
+    The trainer's learning rates and regularizers are tuned for
+    cold-scale parameters, while the LS iterates put all amplitude into
+    B (stage 2 works in the orthonormal basis).  Two exact invariances
+    fix that without changing a single prediction (c^(n) = a·B^(n) is
+    what x̂ sees): scaling column j of A^(n) by β and row j of B^(n) by
+    1/β pins each factor column to the cold init's expected column norm
+    2s√(I_n/3) (entries ~ U(0, 2s)); per-rank column scalings γ_{n,r}
+    with Π_n γ_{n,r} = 1 (CP-style norm balancing) then equalize each
+    rank-one term's magnitude across modes.
+    """
+    s = init_scale(cfg)
+    a_out, b_out = [], []
+    for n, (a, b) in enumerate(zip(factors, core)):
+        target = 2.0 * s * jnp.sqrt(cfg.dims[n] / 3.0)
+        beta = target / jnp.maximum(jnp.linalg.norm(a, axis=0), 1e-30)
+        a_out.append(a * beta[None, :])
+        b_out.append(b / beta[:, None])
+    norms = jnp.stack([jnp.linalg.norm(b, axis=0) for b in b_out])
+    norms = jnp.maximum(norms, 1e-30)
+    geo = jnp.exp(jnp.mean(jnp.log(norms), axis=0))
+    b_out = [b * (geo / norms[n])[None, :] for n, b in enumerate(b_out)]
+    return tuple(a_out), tuple(b_out)
+
+
+def sketched_init_params(
+    key: jax.Array,
+    cfg: FastTuckerConfig,
+    indices: jax.Array,
+    values: jax.Array,
+    *,
+    num_shards: int = 1,
+) -> FastTuckerParams:
+    """The full warm start: range-finder A^(n) → LS B^(n) → refinement.
+
+    Deterministic under ``key`` and invariant to ``num_shards`` (bitwise,
+    locked by property tests — sharding only affects how the stage-1/2
+    per-sample contributions are computed, never the reductions); stored
+    in ``cfg.param_dtype`` like the cold init (computation stays f32).
+    """
+    indices = jnp.asarray(indices)
+    values = jnp.asarray(values)
+    if indices.ndim != 2 or indices.shape[1] != cfg.order:
+        raise ValueError(
+            f"indices must be (nnz, {cfg.order}), got {indices.shape}")
+    factors = sketch_range_finders(key, cfg, indices, values,
+                                   num_shards=num_shards)
+    core = sketch_core_factors(key, cfg, factors, indices, values,
+                               num_shards=num_shards)
+    didx, dval = sample_batch_arrays(jax.random.fold_in(key, _SALT_DAMP),
+                                     indices, values,
+                                     cfg.sketch_batch_size)
+    core = _damp_core(cfg, factors, core, didx, dval)
+    factors, core = _rebalance(cfg, factors, core)
+    if cfg.sketch_refine_passes:
+        factors, core = sketch_refine(key, cfg, factors, core,
+                                      indices, values)
+        factors, core = _rebalance(cfg, factors, core)
+    return FastTuckerParams(
+        tuple(f.astype(cfg.param_dtype) for f in factors),
+        tuple(b.astype(cfg.param_dtype) for b in core),
+    )
+
+
+__all__ = [
+    "sketch_samples",
+    "sketch_range_finders",
+    "sketch_core_factors",
+    "sketch_refine",
+    "sketched_init_params",
+]

@@ -29,6 +29,24 @@ stores factors/core factors in bf16 with f32 MXU accumulation
 donates the step's DistState buffers into the compiled update so XLA
 aliases instead of reallocating them.
 
+``--warm-start`` initializes with the randomized sketched warm start
+(``core.sketch``: sampled Khatri–Rao range finders → sketched core LS →
+alternating-LS refinement) instead of the cold uniform draw —
+deterministic under ``--seed`` and strategy-agnostic (the warm params
+are built before the strategy pads/partitions them).  ``--sketch-*``
+expose the sketch knobs and ``--warm-step-offset`` resumes the decaying
+LR schedule mid-way (see docs/convergence.md).
+
+``--adaptive-rank`` turns on the validation-plateau rank controller
+(``core.adaptive``): when eval RMSE stalls the Kruskal core rank doubles
+(up to ``--max-core-rank``); if a doubling buys nothing it reverts and
+freezes.  Transitions are pad/truncate on the core factors, the strategy
+re-prepares at the new rank (compiled steps stay log-many), and
+``--refine als|ccd`` optionally polishes the factors with the exact
+baseline epochs after each transition.  Incompatible with
+``--out-of-core`` (the prefetcher pins per-stratum buffers to one plan)
+and ``--ckpt-dir`` (checkpoints assume one config per run).
+
 ``--out-of-core`` (strata flavors) feeds the schedule from a
 chunk-sharded ``data.pipeline.NonzeroStore`` (``--spill-dir`` memory-maps
 the chunks to disk) through the ``StratumPrefetcher`` — each stratum's
@@ -142,6 +160,36 @@ def main() -> None:
                     help="spill the nonzero store to memory-mapped .npy "
                          "chunks in this directory (default: in-memory "
                          "chunks — same prefetch path, no disk)")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="sketched randomized warm start (core.sketch) "
+                         "instead of the cold uniform init")
+    ap.add_argument("--sketch-passes", type=int, default=2,
+                    help="sample passes feeding the range finder")
+    ap.add_argument("--sketch-oversample", type=int, default=4,
+                    help="sketch width = rank + oversample")
+    ap.add_argument("--sketch-batch", type=int, default=0,
+                    help="sketch samples per pass (0 → --batch)")
+    ap.add_argument("--sketch-refine-passes", type=int, default=4,
+                    help="alternating ALS/core-LS polish passes")
+    ap.add_argument("--warm-step-offset", type=int, default=0,
+                    help="start the decaying LR schedule at this step "
+                         "after a warm start (0 = cold schedule)")
+    ap.add_argument("--adaptive-rank", action="store_true",
+                    help="grow/shrink the Kruskal core rank on "
+                         "validation-RMSE plateaus (core.adaptive)")
+    ap.add_argument("--max-core-rank", type=int, default=0,
+                    help="adaptive-rank growth cap (0 → 4x --core-rank)")
+    ap.add_argument("--plateau-tol", type=float, default=0.01,
+                    help="relative RMSE improvement below this counts "
+                         "as a plateau observation")
+    ap.add_argument("--plateau-patience", type=int, default=2,
+                    help="consecutive plateau observations before a "
+                         "rank transition")
+    ap.add_argument("--refine", default="", choices=["", "als", "ccd"],
+                    help="polish factors with exact baseline epochs "
+                         "after each rank transition")
+    ap.add_argument("--refine-passes", type=int, default=1,
+                    help="epochs per post-transition refinement")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest checkpoint in --ckpt-dir "
@@ -186,7 +234,30 @@ def main() -> None:
         backend=backend, phase_split=args.phase_split,
         sorted_batches=args.sorted_batches,
         dtype=args.dtype, accum_dtype=args.accum_dtype,
+        init="sketched" if args.warm_start else "random",
+        sketch_passes=args.sketch_passes,
+        sketch_oversample=args.sketch_oversample,
+        sketch_batch=args.sketch_batch,
+        sketch_refine_passes=args.sketch_refine_passes,
+        warm_step_offset=args.warm_step_offset,
     )
+
+    controller = None
+    if args.adaptive_rank:
+        if args.out_of_core:
+            raise SystemExit(
+                "--adaptive-rank rebuilds the strategy plan at each rank "
+                "transition, which the out-of-core prefetcher does not "
+                "support; drop --out-of-core")
+        if args.ckpt_dir:
+            raise SystemExit(
+                "--adaptive-rank changes the config mid-run; checkpoints "
+                "assume one config per run — drop --ckpt-dir")
+        from repro.core import RankController
+        max_rank = args.max_core_rank or 4 * args.core_rank
+        controller = RankController(
+            args.core_rank, max_rank, tol=args.plateau_tol,
+            patience=args.plateau_patience)
 
     mesh = make_host_mesh() if strategy.needs_mesh else None
     if args.out_of_core:
@@ -215,7 +286,15 @@ def main() -> None:
 
     key = jax.random.PRNGKey(args.seed)
     key, init_key, loop_key = jax.random.split(key, 3)
-    dstate = strategy.init(plan, init_state(init_key, cfg), loop_key)
+    if args.warm_start:
+        t_warm = time.time()
+        state0 = init_state(init_key, cfg, train_t.indices, train_t.values)
+        jax.block_until_ready(state0.params.factors)
+        log.info("sketched warm start in %.2fs (LR schedule from step %d)",
+                 time.time() - t_warm, int(state0.step))
+    else:
+        state0 = init_state(init_key, cfg)
+    dstate = strategy.init(plan, state0, loop_key)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     if ckpt and args.resume and ckpt.latest_step() is not None:
@@ -251,9 +330,37 @@ def main() -> None:
                 last_logged = i
                 params = strategy.eval_params(plan, dstate)
                 r, m = rmse_mae(params, test_t, ft.predict)
-                log.info("step %d rmse %.4f mae %.4f", i, r, m)
+                log.info("step %d rmse %.4f mae %.4f (core rank %d)",
+                         i, r, m, cfg.core_rank)
                 if ckpt:
                     strategy.save(plan, ckpt, dstate)
+                decision = controller.observe(r) if controller else None
+                if decision is not None and i < args.steps:
+                    from repro.core import (TrainState, refine_factors,
+                                            resize_core_rank)
+                    from repro.core.sampling import sample_batch_arrays
+                    from repro.core.sptensor import SparseTensor
+                    rank_key = jax.random.fold_in(key, 1000 + i)
+                    params, cfg = resize_core_rank(
+                        params, cfg, decision.new_rank, rank_key)
+                    if args.refine:
+                        ridx, rval = sample_batch_arrays(
+                            jax.random.fold_in(key, 2000 + i),
+                            train_t.indices, train_t.values,
+                            min(train_t.indices.shape[0], 65536))
+                        params = refine_factors(
+                            params, cfg, SparseTensor(ridx, rval, dims),
+                            method=args.refine, passes=args.refine_passes)
+                    log.info("rank %s -> %d at step %d (%s)",
+                             decision.action, decision.new_rank, i,
+                             decision.reason)
+                    plan = strategy.prepare(train_t, cfg, mesh,
+                                            compress=args.compress,
+                                            seed=args.seed)
+                    dstate = strategy.init(
+                        plan, TrainState(params, dstate.step), loop_key)
+                    step_fn = strategy.make_step(plan)
+                    nnz_step = strategy.nnz_per_step(plan)
                 t_int = time.time()
     fetch = getattr(step_fn, "prefetcher", None)
     if fetch is not None:

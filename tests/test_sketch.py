@@ -1,0 +1,472 @@
+"""Sketched warm start (core.sketch) + adaptive rank (core.adaptive).
+
+Locks the PR 10 contracts:
+
+* **range-finder orthonormality** — the warm ``A^(n)`` are QR range
+  finders, so QᵀQ = I up to float error (hypothesis-driven over seeds,
+  example-based fallback on minimal containers);
+* **determinism** — the full warm start is BITWISE reproducible under a
+  fixed seed, and BITWISE invariant to how the per-sample contribution
+  computation is sharded (``num_shards``) — reductions are always one
+  global op over the concatenated samples;
+* **cold path untouched** — ``init="random"`` ignores the data arrays
+  bitwise (the golden trajectories separately pin the cold f32 path),
+  ``init="sketched"`` without data fails loudly, and
+  ``warm_step_offset`` moves the LR schedule only for warm starts;
+* **strategy parity** — warm params survive every strategy's
+  init → eval_params round trip bitwise (strata pads rows, eval trims),
+  so the warm start is strategy-agnostic;
+* **it actually warm-starts** — at toy scale the sketched init's step-0
+  RMSE beats a cold run 30 SGD steps in;
+* **adaptive rank** — RankController grow/shrink/saturate state
+  machine, resize_core_rank pad/truncate semantics, refine_factors
+  polish;
+* **benchmark contract** — bench_convergence/v1 and bench_accuracy/v1
+  validators accept the committed documents and reject regressions.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (
+    FastTuckerConfig,
+    RankController,
+    TrainState,
+    init_params,
+    init_state,
+    refine_factors,
+    resize_core_rank,
+    rmse_mae,
+)
+from repro.core import fasttucker as ft
+from repro.core.sketch import sketch_range_finders, sketched_init_params
+from repro.data.synthetic import planted_tensor
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DIMS = (30, 24, 18)
+NNZ = 2_000
+
+
+def _cfg(**kw):
+    base = dict(dims=DIMS, ranks=(4,) * 3, core_rank=4, batch_size=256,
+                sketch_batch=512, sketch_refine_passes=2)
+    base.update(kw)
+    return FastTuckerConfig(**base)
+
+
+def _data(seed=0):
+    t = planted_tensor(DIMS, NNZ, rank=4, core_rank=4, seed=seed)
+    return t
+
+
+def _params_equal(p, q):
+    for a, b in zip(p.factors + p.core_factors,
+                    q.factors + q.core_factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# range finder: orthonormal columns (the actual property)
+# ---------------------------------------------------------------------------
+
+def _check_orthonormal(seed: int) -> None:
+    t = _data(seed % 3)
+    cfg = _cfg()
+    factors = sketch_range_finders(jax.random.PRNGKey(seed), cfg,
+                                   t.indices, t.values)
+    for n, a in enumerate(factors):
+        assert a.shape == (DIMS[n], cfg.ranks[n])
+        np.testing.assert_allclose(
+            np.asarray(a.T @ a), np.eye(cfg.ranks[n]),
+            atol=1e-5, err_msg=f"mode {n} not orthonormal (seed {seed})")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1_000))
+def test_range_finder_orthonormal_property(seed):
+    _check_orthonormal(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_range_finder_orthonormal_examples(seed):
+    _check_orthonormal(seed)
+
+
+# ---------------------------------------------------------------------------
+# determinism + shard invariance (bitwise)
+# ---------------------------------------------------------------------------
+
+def test_warm_start_bitwise_deterministic():
+    t = _data()
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    p1 = sketched_init_params(key, cfg, t.indices, t.values)
+    p2 = sketched_init_params(key, cfg, t.indices, t.values)
+    _params_equal(p1, p2)
+
+
+def _check_shard_invariant(num_shards: int) -> None:
+    t = _data()
+    cfg = _cfg()
+    key = jax.random.PRNGKey(5)
+    base = sketched_init_params(key, cfg, t.indices, t.values)
+    sharded = sketched_init_params(key, cfg, t.indices, t.values,
+                                   num_shards=num_shards)
+    _params_equal(base, sharded)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=2, max_value=7))
+def test_warm_start_shard_invariant_property(num_shards):
+    _check_shard_invariant(num_shards)
+
+
+def test_warm_start_shard_invariant_example():
+    _check_shard_invariant(3)
+
+
+def test_different_seeds_differ():
+    t = _data()
+    cfg = _cfg()
+    p1 = sketched_init_params(jax.random.PRNGKey(0), cfg,
+                              t.indices, t.values)
+    p2 = sketched_init_params(jax.random.PRNGKey(1), cfg,
+                              t.indices, t.values)
+    assert not np.array_equal(np.asarray(p1.factors[0]),
+                              np.asarray(p2.factors[0]))
+
+
+# ---------------------------------------------------------------------------
+# init plumbing: cold path untouched, warm path strict, step offset
+# ---------------------------------------------------------------------------
+
+def test_cold_init_ignores_data_bitwise():
+    t = _data()
+    cfg = _cfg()  # init="random"
+    key = jax.random.PRNGKey(0)
+    _params_equal(init_params(key, cfg),
+                  init_params(key, cfg, t.indices, t.values))
+
+
+def test_sketched_init_requires_data():
+    cfg = _cfg(init="sketched")
+    with pytest.raises(ValueError, match="sketched"):
+        init_params(jax.random.PRNGKey(0), cfg)
+
+
+def test_sketched_init_rejects_bad_indices():
+    cfg = _cfg(init="sketched")
+    with pytest.raises(ValueError, match="indices"):
+        sketched_init_params(jax.random.PRNGKey(0), cfg,
+                             jnp.zeros((10, 2), jnp.int32),
+                             jnp.ones((10,), jnp.float32))
+
+
+def test_warm_step_offset_only_for_sketched():
+    t = _data()
+    warm = init_state(jax.random.PRNGKey(0),
+                      _cfg(init="sketched", warm_step_offset=7),
+                      t.indices, t.values)
+    assert int(warm.step) == 7
+    cold = init_state(jax.random.PRNGKey(0), _cfg(warm_step_offset=7))
+    assert int(cold.step) == 0
+
+
+def test_init_state_sketched_matches_direct_call():
+    t = _data()
+    cfg = _cfg(init="sketched")
+    key = jax.random.PRNGKey(2)
+    state = init_state(key, cfg, t.indices, t.values)
+    _params_equal(state.params,
+                  sketched_init_params(key, cfg, t.indices, t.values))
+
+
+# ---------------------------------------------------------------------------
+# strategy parity: warm params survive init → eval_params bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["local", "strata"])
+def test_warm_params_survive_strategy_roundtrip(name):
+    from repro.distributed import get_strategy
+    from repro.launch.mesh import make_host_mesh
+
+    t = _data()
+    train_t, _ = t.split(0.2)
+    cfg = _cfg(init="sketched")
+    key = jax.random.PRNGKey(0)
+    state0 = init_state(key, cfg, train_t.indices, train_t.values)
+
+    strategy = get_strategy(name)
+    mesh = make_host_mesh() if strategy.needs_mesh else None
+    plan = strategy.prepare(train_t, cfg, mesh, seed=0)
+    dstate = strategy.init(plan, state0, jax.random.PRNGKey(1))
+    _params_equal(strategy.eval_params(plan, dstate), state0.params)
+
+
+# ---------------------------------------------------------------------------
+# the point of it all: warm step-0 beats cold after 30 SGD steps
+# ---------------------------------------------------------------------------
+
+def test_warm_start_beats_cold_sgd():
+    # larger than the bitwise-test toy: at very small scale the sketch's
+    # sampled LS can stall on unlucky seeds (the alternating refinement
+    # needs a few hundred rows per mode to condition its solves — see
+    # docs/convergence.md); this shape is robust across seeds
+    dims = (48, 40, 32)
+    t = planted_tensor(dims, 8_000, rank=4, core_rank=4, seed=0)
+    train_t, test_t = t.split(0.2)
+    cfg = FastTuckerConfig(dims=dims, ranks=(4,) * 3, core_rank=4,
+                           batch_size=512, sketch_batch=2048,
+                           sketch_refine_passes=4)
+    key = jax.random.PRNGKey(0)
+    warm = sketched_init_params(key, cfg, train_t.indices, train_t.values)
+    warm_rmse, _ = rmse_mae(warm, test_t, ft.predict)
+
+    state = init_state(key, cfg)
+    for i in range(30):
+        state = ft.sgd_step(state, jax.random.fold_in(key, i),
+                            train_t.indices, train_t.values, cfg)
+    cold_rmse, _ = rmse_mae(state.params, test_t, ft.predict)
+    assert float(warm_rmse) < float(cold_rmse), \
+        f"warm {float(warm_rmse):.4f} vs cold@30 {float(cold_rmse):.4f}"
+
+
+# ---------------------------------------------------------------------------
+# RankController: grow / shrink / saturate
+# ---------------------------------------------------------------------------
+
+def test_controller_grows_on_plateau():
+    c = RankController(4, 16, tol=0.01, patience=2)
+    assert c.observe(1.0) is None          # first obs sets the baseline
+    assert c.observe(0.999) is None        # stale 1
+    d = c.observe(0.999)                   # stale 2 == patience → grow
+    assert d is not None and d.action == "grow" and d.new_rank == 8
+    assert c.rank == 8 and not c.done
+    assert [r for _, r in c.history] == [4, 4, 4]
+
+
+def test_controller_improvement_resets_patience():
+    c = RankController(4, 16, tol=0.01, patience=2)
+    c.observe(1.0)
+    assert c.observe(0.5) is None          # big improvement
+    assert c.observe(0.499) is None        # stale 1
+    assert c.observe(0.4) is None          # improvement again → reset
+    assert c.rank == 4
+
+
+def test_controller_shrinks_when_growth_unpaid():
+    c = RankController(4, 16, tol=0.01, patience=1, grow_gain=0.02)
+    c.observe(1.0)
+    d = c.observe(1.0)
+    assert d.action == "grow" and d.new_rank == 8
+    c.observe(0.995)                       # barely better than pre-grow
+    d = c.observe(0.995)
+    assert d is not None and d.action == "shrink" and d.new_rank == 4
+    assert c.done
+    assert c.observe(0.1) is None          # frozen after saturation
+
+
+def test_controller_keeps_paid_growth():
+    c = RankController(4, 8, tol=0.01, patience=1, grow_gain=0.02)
+    c.observe(1.0)
+    assert c.observe(1.0).action == "grow"
+    c.observe(0.5)                         # growth paid 50%
+    d = c.observe(0.5)                     # plateau at max_rank
+    assert d is None and c.done and c.rank == 8
+
+
+def test_controller_validates_args():
+    with pytest.raises(ValueError):
+        RankController(0, 4)
+    with pytest.raises(ValueError):
+        RankController(8, 4)
+    with pytest.raises(ValueError):
+        RankController(4, 8, tol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# resize_core_rank: pad / truncate
+# ---------------------------------------------------------------------------
+
+def test_resize_grow_pads_small_columns():
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    grown, gcfg = resize_core_rank(params, cfg, 8, jax.random.PRNGKey(1))
+    assert gcfg.core_rank == 8
+    for old, new in zip(params.core_factors, grown.core_factors):
+        assert new.shape == (old.shape[0], 8)
+        np.testing.assert_array_equal(np.asarray(new[:, :4]),
+                                      np.asarray(old))
+        # appended columns are damped (grow_scale × cold scale), not dead
+        tail = np.asarray(new[:, 4:])
+        assert 0.0 < tail.max() < np.asarray(old).max()
+    for old, new in zip(params.factors, grown.factors):
+        np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+
+def test_resize_shrink_keeps_top_energy_columns():
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # make columns 0 and 2 dominate the multiplicative energy
+    boost = jnp.array([10.0, 1.0, 5.0, 1.0])
+    params = ft.FastTuckerParams(
+        params.factors,
+        tuple(b * boost[None, :] for b in params.core_factors))
+    small, scfg = resize_core_rank(params, cfg, 2, jax.random.PRNGKey(1))
+    assert scfg.core_rank == 2
+    for old, new in zip(params.core_factors, small.core_factors):
+        np.testing.assert_array_equal(np.asarray(new),
+                                      np.asarray(old[:, jnp.array([0, 2])]))
+
+
+def test_resize_noop_and_validation():
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    same, same_cfg = resize_core_rank(params, cfg, 4, jax.random.PRNGKey(1))
+    _params_equal(same, params)
+    assert same_cfg.core_rank == 4
+    with pytest.raises(ValueError):
+        resize_core_rank(params, cfg, 0, jax.random.PRNGKey(1))
+
+
+def test_refine_factors_improves_fit():
+    t = _data()
+    train_t, test_t = t.split(0.2)
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    before, _ = rmse_mae(params, test_t, ft.predict)
+    for method in ("als", "ccd"):
+        polished = refine_factors(params, cfg, train_t, method=method,
+                                  passes=2)
+        after, _ = rmse_mae(polished, test_t, ft.predict)
+        assert float(after) < float(before), method
+        for old, new in zip(params.core_factors, polished.core_factors):
+            np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+    with pytest.raises(ValueError):
+        refine_factors(params, cfg, train_t, method="nope")
+
+
+# ---------------------------------------------------------------------------
+# bench_convergence/v1 + bench_accuracy/v1: validators and committed docs
+# ---------------------------------------------------------------------------
+
+def _arm(steps, wall, final, reached=True):
+    return {"reached": reached, "steps_to_target": steps,
+            "wallclock_s_to_target": wall, "init_s": 0.1,
+            "final_rmse": final,
+            "trajectory": [[0, 1.0], [steps or 10, final]]}
+
+
+def _conv_doc(**kw):
+    base = {"name": "c", "backend": "xla", "dims": [8, 8, 8], "nnz": 100,
+            "rank": 4, "core_rank": 4, "batch": 32, "seed": 0,
+            "target_rmse": 0.3, "horizon_steps": 100, "eval_every": 10}
+    doc = {"schema": "bench_convergence/v1", "smoke": False, "configs": [
+        {**base, "strategy": "local",
+         "cold": _arm(80, 2.0, 0.29), "sketched": _arm(0, 0.5, 0.05),
+         "speedup_vs_cold": 80.0, "wallclock_speedup_vs_cold": 4.0},
+        {**base, "strategy": "strata",
+         "cold": _arm(80, 2.0, 0.29), "sketched": _arm(0, 0.5, 0.05),
+         "speedup_vs_cold": 80.0, "wallclock_speedup_vs_cold": 4.0},
+    ]}
+    doc.update(kw)
+    return doc
+
+
+def test_validate_convergence_accepts_good_doc():
+    from benchmarks.common import validate_bench_convergence
+    validate_bench_convergence(_conv_doc())
+
+
+def test_validate_convergence_rejects_regressions():
+    from benchmarks.common import validate_bench_convergence
+
+    doc = _conv_doc(schema="bench_convergence/v0")
+    with pytest.raises(ValueError, match="schema"):
+        validate_bench_convergence(doc)
+
+    doc = _conv_doc()
+    doc["configs"][0]["sketched"]["reached"] = False
+    with pytest.raises(ValueError, match="must reach"):
+        validate_bench_convergence(doc)
+
+    doc = _conv_doc()
+    doc["configs"][0]["sketched"]["steps_to_target"] = 90
+    with pytest.raises(ValueError, match="steps_to_target"):
+        validate_bench_convergence(doc)
+
+    doc = _conv_doc()
+    doc["configs"][0]["speedup_vs_cold"] = 0.9
+    with pytest.raises(ValueError, match="speedup_vs_cold"):
+        validate_bench_convergence(doc)
+
+    doc = _conv_doc()
+    doc["configs"][0]["sketched"]["final_rmse"] = 0.4  # worse than cold
+    with pytest.raises(ValueError, match="final_rmse"):
+        validate_bench_convergence(doc)
+
+    doc = _conv_doc()                      # wall-clock loss on a full run
+    doc["configs"][0]["wallclock_speedup_vs_cold"] = 0.8
+    with pytest.raises(ValueError, match="wallclock"):
+        validate_bench_convergence(doc)
+    doc["smoke"] = True                    # ... tolerated in smoke
+    from benchmarks.common import validate_bench_convergence as v
+    v(doc)
+
+    doc = _conv_doc()
+    doc["configs"] = [doc["configs"][0]]   # strata coverage missing
+    with pytest.raises(ValueError, match="strata"):
+        validate_bench_convergence(doc)
+
+
+def _acc_doc():
+    def r(model, variant, rmse):
+        return {"model": model, "variant": variant, "rank": 4,
+                "rmse": rmse, "mae": rmse * 0.8}
+    return {"schema": "bench_accuracy/v1",
+            "config": {"dims": [8, 8, 8], "nnz": 100, "steps": 10,
+                       "seed": 0, "value_rms": 3.0},
+            "results": [r("fasttucker", "factor+core", 0.25),
+                        r("fasttucker", "factor_only", 0.26),
+                        r("cutucker", "baseline", 0.24)]}
+
+
+def test_validate_accuracy_accepts_and_rejects():
+    from benchmarks.common import validate_bench_accuracy
+
+    validate_bench_accuracy(_acc_doc())
+
+    doc = _acc_doc()
+    doc["results"][0]["rmse"] = 0.30       # factor+core worse than ablation
+    with pytest.raises(ValueError, match="factor_only"):
+        validate_bench_accuracy(doc)
+
+    doc = _acc_doc()
+    doc["results"][0]["rmse"] = 3.5        # loses to the zero predictor
+    with pytest.raises(ValueError, match="zero predictor"):
+        validate_bench_accuracy(doc)
+
+    doc = _acc_doc()
+    doc["results"] = doc["results"][:2]    # baseline row missing
+    with pytest.raises(ValueError, match="cutucker"):
+        validate_bench_accuracy(doc)
+
+
+@pytest.mark.parametrize("fname,validator", [
+    ("BENCH_convergence.json", "validate_bench_convergence"),
+    ("BENCH_accuracy.json", "validate_bench_accuracy"),
+])
+def test_committed_bench_docs_validate(fname, validator):
+    import benchmarks.common as common
+
+    path = os.path.join(REPO, fname)
+    with open(path) as f:
+        doc = json.load(f)
+    getattr(common, validator)(doc)
+    assert not doc["smoke"], f"{fname} must be a full (non-smoke) run"
